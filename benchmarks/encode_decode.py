@@ -1,0 +1,47 @@
+"""Measured encode/decode micro-benchmarks of OUR implementations (the
+paper's Table 2 instrumented on this repo's code; CPU wall times — the
+relative ordering, not absolute V100/TPU numbers, is the comparable part).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import base as cbase
+
+
+def _time(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def measure(n: int = 1 << 20):
+    """Per-method single-worker compression round-trip time for an
+    n-element bucket (aggregate under a 1-device mesh == encode+decode)."""
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = jax.random.normal(jax.random.key(0), (n,))
+    rows = []
+    methods = [("powersgd", dict(rank=4)), ("powersgd", dict(rank=8)),
+               ("signsgd", {}), ("mstopk", dict(frac=0.01)),
+               ("qsgd", dict(bits=8)), ("randomk", {}), ("terngrad", {}),
+               ("none", {})]
+    for name, kw in methods:
+        comp = cbase.make(name, **kw)
+        st = comp.init_state(n, jax.random.key(1))
+        st_spec = jax.tree.map(lambda _: P(), st)
+        f = jax.jit(jax.shard_map(
+            lambda b, s: comp.aggregate(b, s, ("data",)),
+            mesh=mesh, in_specs=(P(None), st_spec),
+            out_specs=(P(None), st_spec), check_vma=False))
+        us = _time(f, g, st) * 1e6
+        rows.append(dict(method=comp.name, n=n, us_per_call=round(us, 1),
+                         ratio=round(comp.compression_ratio(n), 1)))
+    return rows

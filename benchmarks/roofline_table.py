@@ -1,0 +1,51 @@
+"""§Roofline table: aggregates artifacts/dryrun/*.json into the per-cell
+three-term roofline report (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(art_dir: str = ART, mesh: str | None = "single"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(p))
+        cell = r["cell"]
+        parts = cell.split("__")
+        if mesh and parts[2] != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append(dict(arch=parts[0], shape=parts[1], mesh=parts[2],
+                             status=r["status"],
+                             note=r.get("reason", r.get("error", ""))[:60]))
+            continue
+        rl = r["roofline"]
+        rows.append(dict(
+            arch=parts[0], shape=parts[1], mesh=parts[2], status="ok",
+            gib_per_dev=round(rl["bytes_per_device"] / 2**30, 2),
+            fits=r["fits_hbm"],
+            compute_ms=round(rl["compute_s"] * 1e3, 1),
+            memory_ms=round(rl["memory_s"] * 1e3, 1),
+            collective_ms=round(rl["collective_s"] * 1e3, 1),
+            ici_ms=round(rl["ici_s"] * 1e3, 1),
+            dcn_ms=round(rl["dcn_s"] * 1e3, 1),
+            dominant=rl["dominant"],
+            useful_ratio=round(rl["useful_ratio"], 2),
+            roofline_frac=round(rl["roofline_fraction"], 3),
+        ))
+    return rows
+
+
+def markdown(rows) -> str:
+    if not rows:
+        return "(no dry-run artifacts found — run repro.launch.dryrun)"
+    cols = list(rows[0].keys())
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols)
+                   + " |")
+    return "\n".join(out)

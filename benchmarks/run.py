@@ -1,0 +1,60 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure (from the performance model, with the
+published anchors verified inline), the measured encode/decode
+micro-benchmarks of this repo's compressors, and the roofline table from
+the dry-run artifacts.  CSV lines: ``name,us_per_call,derived``.
+"""
+import sys
+import time
+
+
+def main() -> None:
+    t_start = time.time()
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "src"))
+    from benchmarks import encode_decode, paper_figures, roofline_table
+
+    failures = 0
+    print("=" * 72)
+    print("PAPER FIGURES / TABLES (performance model + anchor checks)")
+    print("=" * 72)
+    for name, fn in paper_figures.ALL.items():
+        t0 = time.time()
+        rows, verdicts = fn()
+        us = (time.time() - t0) * 1e6
+        print(f"\n--- {name} ---")
+        print(f"{name},{us:.0f},rows={len(rows)}")
+        for r in rows[:6]:
+            print("  " + ",".join(f"{k}={v:.4g}" if isinstance(v, float)
+                                  else f"{k}={v}" for k, v in r.items()))
+        if len(rows) > 6:
+            print(f"  ... ({len(rows) - 6} more rows)")
+        for claim, got, want, ok in verdicts:
+            flag = "PASS" if ok else "FAIL"
+            if not ok:
+                failures += 1
+            print(f"  [{flag}] {claim}: predicted {got} vs paper {want}")
+
+    print("\n" + "=" * 72)
+    print("ENCODE/DECODE MICRO-BENCH (our implementations, CPU wall time)")
+    print("=" * 72)
+    for r in encode_decode.measure():
+        print(f"encdec_{r['method']},{r['us_per_call']},"
+              f"ratio={r['ratio']}x")
+
+    print("\n" + "=" * 72)
+    print("ROOFLINE TABLE (from dry-run artifacts; single-pod mesh)")
+    print("=" * 72)
+    rows = roofline_table.load()
+    print(roofline_table.markdown(rows))
+
+    print(f"\nbench_total,{(time.time() - t_start) * 1e6:.0f},"
+          f"anchor_failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

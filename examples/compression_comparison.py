@@ -1,0 +1,77 @@
+"""The paper's experiment, end to end on this framework: train the SAME
+model with each gradient-compression scheme on an 8-device (2 pods × 2 data
+× 2 model) mesh, then ask the performance model what each scheme would cost
+at production scale — reproducing the paper's punchline: at data-center
+bandwidth compression rarely wins; on a scarce link it does.
+
+    PYTHONPATH=src python examples/compression_comparison.py
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import base
+    from repro.core.perfmodel import calibration as cal
+    from repro.core.perfmodel import model as pm
+    from repro.data.synthetic import DataConfig, batch_at
+    from repro.launch.mesh import make_test_mesh
+    from repro.train import train_step as ts
+
+    mesh = make_test_mesh((2, 2, 2))
+    arch0 = base.reduced(base.get("tinyllama-1.1b"))
+    dcfg = DataConfig(vocab=arch0.vocab, seq_len=64, global_batch=8)
+    steps = 12
+
+    schemes = [("none", {}), ("powersgd", {}), ("signsgd", {}),
+               ("qsgd", {}), ("mstopk", {})]
+    print(f"{'scheme':10s} {'final loss':>10s}   (8-dev mesh, {steps} steps,"
+          " compress axis = pod/DCN)")
+    finals = {}
+    for name, kw in schemes:
+        arch = dataclasses.replace(arch0, plan=dataclasses.replace(
+            arch0.plan, compression=name, compress_axes="pod",
+            bucket_mb=1, **kw))
+        setup = ts.build(arch, mesh)
+        state = ts.init_state(setup, jax.random.key(0))
+        b0 = {k: jnp.asarray(v) for k, v in batch_at(dcfg, 0).items()}
+        step = ts.make_step(setup)(b0)
+        loss = None
+        for i in range(steps):
+            b = {k: jnp.asarray(v) for k, v in batch_at(dcfg, i).items()}
+            state, m = step(state, b, jnp.float32(2e-3))
+            loss = float(m["loss"])
+        finals[name] = loss
+        print(f"{name:10s} {loss:10.4f}")
+    spread = max(finals.values()) - min(finals.values())
+    print(f"\nloss parity across schemes: spread {spread:.3f} nats "
+          "(error feedback keeps compressed training on track)\n")
+
+    # ---- what would each scheme cost at production scale? ----
+    print("perf-model projection — ResNet-101-class workload, 96 workers:")
+    print(f"{'scheme':14s} {'10 Gb/s':>10s} {'2 Gb/s (WAN)':>14s}")
+    hw_dc = cal.PAPER_HW
+    hw_wan = cal.PAPER_HW.with_net(2.0)
+    t_dc = pm.sync_sgd_time(cal.RESNET101, 96, hw_dc)
+    t_wan = pm.sync_sgd_time(cal.RESNET101, 96, hw_wan)
+    print(f"{'syncSGD':14s} {t_dc * 1e3:8.0f}ms {t_wan * 1e3:12.0f}ms")
+    for method in ("powersgd-r4", "signsgd", "mstopk-0.01"):
+        spec = cal.paper_spec(method, cal.RESNET101)
+        a = pm.compressed_time(cal.RESNET101, 96, hw_dc, spec)
+        b = pm.compressed_time(cal.RESNET101, 96, hw_wan, spec)
+        tag = lambda t, s: f"{t * 1e3:8.0f}ms" + ("*" if t < s else " ")
+        print(f"{method:14s} {tag(a, t_dc)} {tag(b, t_wan):>13s}")
+    print("(* = faster than syncSGD — the paper's Fig 3/17 regimes)")
+
+
+if __name__ == "__main__":
+    main()

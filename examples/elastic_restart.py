@@ -1,0 +1,74 @@
+"""Fault tolerance demo: train on 8 devices with PowerSGD-compressed
+pod-axis gradients, checkpoint, "lose a pod", and resume the SAME run on 4
+devices — parameters restore exactly; per-device compressor state resets
+and re-accumulates (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import sys
+import tempfile
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+
+def main():
+    import jax
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import base
+    from repro.data.pipeline import Pipeline
+    from repro.data.synthetic import DataConfig
+    from repro.launch.mesh import make_test_mesh
+    from repro.train import train_step as ts
+    from repro.train.schedule import ScheduleConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    arch = base.reduced(base.get("tinyllama-1.1b"))
+    arch = dataclasses.replace(arch, plan=dataclasses.replace(
+        arch.plan, zero1=False, compression="powersgd", bucket_mb=1))
+    dcfg = DataConfig(vocab=arch.vocab, seq_len=64, global_batch=8)
+    d = tempfile.mkdtemp(prefix="repro_elastic_")
+
+    print("[elastic] phase 1: 8 devices (2 pods x 2 data x 2 model), "
+          "PowerSGD on the pod axis")
+    mesh8 = make_test_mesh((2, 2, 2))
+    setup8 = ts.build(arch, mesh8)
+    tr = Trainer(setup8, TrainerConfig(
+        total_steps=6, log_every=2, ckpt_every=3, ckpt_dir=d,
+        schedule=ScheduleConfig(peak_lr=1e-3, warmup_steps=2,
+                                total_steps=12)),
+        Pipeline(dcfg, prefetch=0))
+    st8 = tr.run(jax.random.key(0))
+    p8 = jax.device_get(st8["params"])
+
+    print("\n[elastic] phase 2: a pod is gone — resume on 4 devices")
+    devs = np.array(jax.devices()[:4]).reshape(1, 2, 2)
+    mesh4 = jax.sharding.Mesh(devs, ("pod", "data", "model"))
+    setup4 = ts.build(arch, mesh4)
+    mgr = CheckpointManager(d, setup4)
+    restored, cursor = mgr.restore_latest()
+    for a, b in zip(jax.tree.leaves(p8),
+                    jax.tree.leaves(jax.device_get(restored["params"]))):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-6)
+    print(f"[elastic] restored step "
+          f"{int(jax.device_get(restored['step']))} with IDENTICAL "
+          f"parameters; data cursor {cursor} (sample-exact resume)")
+    data4 = Pipeline(dcfg, prefetch=0)
+    tr4 = Trainer(setup4, TrainerConfig(
+        total_steps=12, log_every=2, ckpt_dir=d,
+        schedule=ScheduleConfig(peak_lr=1e-3, warmup_steps=2,
+                                total_steps=12)), data4)
+    tr4.run()
+    print("[elastic] OK — training continued through a 8->4 device "
+          "reshard")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Quickstart: the end-to-end training driver (deliverable b).
+
+Trains a llama-family model on synthetic markov data through the full
+production path — config -> mesh -> TrainSetup -> sharded state -> Trainer
+(checkpointing + preemption handling) — and shows the loss dropping well
+below the unigram entropy.
+
+    PYTHONPATH=src python examples/quickstart.py                 # ~25M, CPU
+    PYTHONPATH=src python examples/quickstart.py --large         # ~110M
+    PYTHONPATH=src python examples/quickstart.py --steps 300
+"""
+import argparse
+import dataclasses
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--large", action="store_true",
+                    help="~110M params (slower on CPU)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart_ckpt")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import base
+    from repro.data.pipeline import Pipeline
+    from repro.data.synthetic import DataConfig
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import registry
+    from repro.train import train_step as ts
+    from repro.train.schedule import ScheduleConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    # a genuinely llama-shaped model, scaled to CPU budget
+    dims = dict(n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+                d_ff=1408, head_dim=64) if args.large else \
+        dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+             d_ff=704, head_dim=64)
+    cfg = base.reduced(base.get("tinyllama-1.1b"), vocab=args.vocab,
+                       **dims)
+    cfg = dataclasses.replace(cfg, plan=dataclasses.replace(
+        cfg.plan, bucket_mb=4))
+    n = registry.param_count(cfg)
+    print(f"[quickstart] model: {cfg.n_layers}L d={cfg.d_model} "
+          f"({n / 1e6:.1f}M params), {args.steps} steps, "
+          f"batch {args.batch}x{args.seq}")
+
+    setup = ts.build(cfg, make_local_mesh())
+    data = Pipeline(DataConfig(vocab=args.vocab, seq_len=args.seq,
+                               global_batch=args.batch, noise=0.15))
+    trainer = Trainer(setup, TrainerConfig(
+        total_steps=args.steps, log_every=10, ckpt_every=100,
+        ckpt_dir=args.ckpt_dir,
+        schedule=ScheduleConfig(peak_lr=args.lr, warmup_steps=20,
+                                total_steps=args.steps)), data)
+    trainer.run(jax.random.key(0))
+
+    first, last = trainer.history[0]["loss"], trainer.history[-1]["loss"]
+    # target: H = noise·ln V + H(noise) ≈ 0.15·6.24 + 0.42 ≈ 1.4 nats
+    h_opt = 0.15 * math.log(args.vocab) + 0.42
+    print(f"\n[quickstart] loss {first:.3f} -> {last:.3f} "
+          f"(uniform {math.log(args.vocab):.2f}, markov optimum ~{h_opt:.2f})")
+    assert last < first - 1.0, "expected a clear learning signal"
+    print("[quickstart] OK — checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

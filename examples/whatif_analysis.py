@@ -1,0 +1,97 @@
+"""The paper's what-if tool (§4.3) as a CLI: reason about distributed
+training performance — and whether gradient compression would help — for
+YOUR workload without running a single large-scale experiment.
+
+    PYTHONPATH=src python examples/whatif_analysis.py \
+        --model-mb 418 --t-comp-ms 550 --workers 96 --bw 10
+    PYTHONPATH=src python examples/whatif_analysis.py --paper  # all figures
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def ascii_plot(rows, xkey, ykeys, width=56, label=""):
+    ys = [r[k] for r in rows for k in ykeys]
+    lo, hi = min(ys), max(ys)
+    span = max(hi - lo, 1e-12)
+    print(f"  {label}  [{lo:.3g} .. {hi:.3g}]")
+    marks = "ox+*"
+    for r in rows:
+        line = [" "] * (width + 1)
+        for i, k in enumerate(ykeys):
+            pos = int((r[k] - lo) / span * width)
+            line[pos] = marks[i % len(marks)]
+        print(f"  {r[xkey]:>8g} |" + "".join(line))
+    print("           " + " ".join(f"{m}={k}" for m, k in
+                                   zip(marks, ykeys)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model-mb", type=float, default=170.0)
+    ap.add_argument("--t-comp-ms", type=float, default=210.0)
+    ap.add_argument("--workers", type=int, default=64)
+    ap.add_argument("--bw", type=float, default=10.0, help="Gb/s")
+    ap.add_argument("--paper", action="store_true",
+                    help="reproduce all simulated paper figures instead")
+    args = ap.parse_args()
+
+    from repro.core.perfmodel import calibration as cal
+    from repro.core.perfmodel import model as pm
+    from repro.core.perfmodel import whatif
+
+    if args.paper:
+        from benchmarks import paper_figures
+        for name, fn in paper_figures.ALL.items():
+            rows, verdicts = fn()
+            print(f"\n=== {name} ({len(rows)} rows) ===")
+            for claim, got, want, ok in verdicts:
+                print(f"  [{'PASS' if ok else 'FAIL'}] {claim}: {got} "
+                      f"(paper: {want})")
+        return
+
+    w = pm.Workload("user", args.model_mb * 2**20, args.t_comp_ms / 1e3)
+    hw = cal.PAPER_HW.with_net(args.bw)
+    p = args.workers
+    print(f"workload: {args.model_mb:.0f} MB grads, backward "
+          f"{args.t_comp_ms:.0f} ms, {p} workers @ {args.bw:g} Gb/s\n")
+
+    t_sync = pm.sync_sgd_time(w, p, hw)
+    print(f"syncSGD (overlapped, bucketed): {t_sync * 1e3:8.1f} ms/iter")
+    print(f"linear-scaling floor:           {w.t_comp * 1e3:8.1f} ms/iter")
+    print(f"gap to linear:                  "
+          f"{pm.gap_to_linear(w, p, hw) * 1e3:8.1f} ms")
+    req = pm.required_compression(w, p, hw)
+    print(f"compression ratio for ~linear:  {req:8.1f}x\n")
+
+    print("candidate schemes (paper Table 2 overheads, byte-scaled):")
+    best = ("syncSGD", t_sync)
+    for method in ("powersgd-r4", "powersgd-r8", "signsgd", "mstopk-0.01"):
+        spec = cal.paper_spec(method, w)
+        t = pm.compressed_time(w, p, hw, spec)
+        verdict = "WIN " if t < t_sync else "lose"
+        print(f"  {method:14s} {t * 1e3:8.1f} ms/iter  [{verdict}]")
+        if t < best[1]:
+            best = (method, t)
+    print(f"\n=> policy: {best[0]} ({best[1] * 1e3:.1f} ms/iter)")
+    spec = cal.paper_spec("powersgd-r4", w)
+    x = pm.crossover_bandwidth(w, p, hw, spec)
+    if x:
+        print(f"   PowerSGD-r4 crossover bandwidth: {x:.1f} Gb/s "
+              f"(compression wins below, syncSGD above)")
+
+    rows = whatif.bandwidth_sweep(w, p, hw, spec,
+                                  gbps=(1, 2, 4, 6, 8, 10, 15, 25))
+    for r in rows:
+        r["t_sync_ms"] = r.pop("t_sync") * 1e3
+        r["t_comp_ms"] = r.pop("t_comp") * 1e3
+    print()
+    ascii_plot(rows, "gbps", ["t_sync_ms", "t_comp_ms"],
+               label="iteration time vs bandwidth (Gb/s)")
+
+
+if __name__ == "__main__":
+    main()

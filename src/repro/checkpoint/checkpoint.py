@@ -1,0 +1,134 @@
+"""Atomic sharded checkpointing with elastic restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        meta.json            # step, cursor, tree structure, leaf index
+        leaf_00000.npy ...   # GLOBAL logical arrays, one per pytree leaf
+
+Writes go to ``<dir>/.tmp_step_000123`` then ``os.replace`` — a crashed
+writer never corrupts the latest checkpoint (restart reads the newest
+COMPLETE directory, validated by meta.json's leaf count).
+
+Elastic restore: leaves are saved as global logical arrays, so restoring
+onto a different mesh is just device_put with the new NamedShardings.
+Per-DEVICE state (compressor error feedback, ZeRO-1 shards) is the one
+exception — its global shape embeds the device count; on a mesh-size
+change it is reset to zeros (bounded, documented cost: error feedback
+re-accumulates within a few steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _paths(tree) -> list[str]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["/".join(str(k) for k in path) for path, _ in flat]
+
+
+def save(dirname: str, step: int, state, cursor: Optional[int] = None):
+    """Atomic write of a (possibly sharded) state pytree."""
+    final = os.path.join(dirname, f"step_{step:09d}")
+    tmp = os.path.join(dirname, f".tmp_step_{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    host_leaves = jax.device_get(leaves)       # gathers global arrays
+    index = []
+    for i, leaf in enumerate(host_leaves):
+        arr = np.asarray(leaf)
+        fn = f"leaf_{i:05d}.npy"
+        raw = arr.dtype.kind not in "biufc"    # ml_dtypes (bf16, fp8, ...)
+        if raw:
+            # np.save would degrade extension dtypes to void — store bytes
+            np.save(os.path.join(tmp, fn),
+                    np.frombuffer(arr.tobytes(), np.uint8))
+        else:
+            np.save(os.path.join(tmp, fn), arr)
+        index.append({"file": fn, "shape": list(arr.shape),
+                      "dtype": str(arr.dtype), "raw": raw})
+    meta = {"step": step, "cursor": cursor, "n_leaves": len(index),
+            "paths": _paths(state), "index": index}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def _complete(path: str) -> bool:
+    meta_p = os.path.join(path, "meta.json")
+    if not os.path.exists(meta_p):
+        return False
+    try:
+        meta = json.load(open(meta_p))
+    except json.JSONDecodeError:
+        return False
+    return all(os.path.exists(os.path.join(path, e["file"]))
+               for e in meta["index"])
+
+
+def list_steps(dirname: str) -> list[int]:
+    if not os.path.isdir(dirname):
+        return []
+    out = []
+    for name in os.listdir(dirname):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and _complete(os.path.join(dirname, name)):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def restore(dirname: str, step: int, like, shardings=None,
+            reset_device_state: bool = False):
+    """Load ``step`` into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: matching NamedSharding tree — when
+    given, leaves are device_put sharded (elastic re-shard).
+
+    Returns (state, cursor).  Shape-mismatched per-device leaves are reset
+    to zeros when reset_device_state (mesh size changed)."""
+    path = os.path.join(dirname, f"step_{step:09d}")
+    meta = json.load(open(os.path.join(path, "meta.json")))
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    assert len(like_leaves) == meta["n_leaves"], \
+        (len(like_leaves), meta["n_leaves"], "checkpoint/state mismatch")
+    shard_leaves = [None] * len(like_leaves)
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+    out = []
+    for i, (entry, like_leaf) in enumerate(zip(meta["index"], like_leaves)):
+        arr = np.load(os.path.join(path, entry["file"]))
+        if entry.get("raw"):
+            import ml_dtypes
+            dt = np.dtype(getattr(ml_dtypes, entry["dtype"]))
+            arr = np.frombuffer(arr.tobytes(), dt).reshape(entry["shape"])
+        want_shape = tuple(like_leaf.shape)
+        if arr.shape != want_shape:
+            if not reset_device_state:
+                raise ValueError(
+                    f"leaf {meta['paths'][i]}: checkpoint {arr.shape} vs "
+                    f"state {want_shape}; pass reset_device_state=True for "
+                    "elastic restore (per-device state resets)")
+            arr = np.zeros(want_shape, arr.dtype)
+        want_dtype = like_leaf.dtype
+        if arr.dtype != want_dtype:
+            # numpy lacks cast kernels between ml_dtypes extension types;
+            # route exotic casts through jnp
+            arr = np.asarray(jnp.asarray(arr).astype(want_dtype))
+        if shard_leaves[i] is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), meta.get("cursor")

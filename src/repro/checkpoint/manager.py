@@ -1,0 +1,119 @@
+"""Checkpoint manager: rotation, latest-discovery, elastic restore onto the
+current mesh (save on an 8-device mesh, restore on 4 — tested)."""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Optional
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+class CheckpointManager:
+    def __init__(self, dirname: str, setup, keep: int = 3):
+        self.dir = dirname
+        self.setup = setup            # TrainSetup (specs + mesh)
+        self.keep = keep
+        os.makedirs(dirname, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state, cursor: Optional[int] = None):
+        path = ckpt.save(self.dir, step, state, cursor)
+        self._rotate()
+        return path
+
+    def _rotate(self):
+        steps = ckpt.list_steps(self.dir)
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def _abstract_state(self):
+        from repro.train import train_step as ts
+        return abstract_state(self.setup)
+
+    def restore_latest(self):
+        steps = ckpt.list_steps(self.dir)
+        if not steps:
+            return None
+        return self.restore(steps[-1])
+
+    def restore(self, step: int):
+        like = self._abstract_state()
+        shardings = self.setup.sharding(self.setup.state_specs)
+        state, cursor = ckpt.restore(self.dir, step, like, shardings,
+                                     reset_device_state=True)
+        state = self._heal_agg_state(state, like, step)
+        return state, cursor
+
+    def _heal_agg_state(self, state, like, step: int):
+        """Elastic reshard resets shape-mismatched per-device leaves to
+        zeros — but zeros BRICK some compressors (PowerSGD's q=0 is an
+        absorbing fixed point of the power iteration).  If any compressor
+        leaf was reset, rebuild the whole agg subtree from its proper
+        initializer (error feedback re-accumulates within a few steps)."""
+        if not state.get("agg"):
+            return state
+        import json
+        import os
+        meta = json.load(open(os.path.join(
+            self.dir, f"step_{step:09d}", "meta.json")))
+        saved = {p_: tuple(e["shape"]) for p_, e in
+                 zip(meta["paths"], meta["index"])}
+        flat = jax.tree_util.tree_flatten_with_path(like)[0]
+        mismatch = any(
+            "agg" in "/".join(str(k) for k in path)
+            and saved.get("/".join(str(k) for k in path)) != leaf.shape
+            for path, leaf in flat)
+        if not mismatch:
+            return state
+        from repro.train import train_step as ts
+        fresh = ts.fresh_agg_state(self.setup, jax.random.key(17))
+        return {**state, "agg": fresh}
+
+
+def abstract_state(setup):
+    """Global ShapeDtypeStruct tree of the TrainState (for restore/lower)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.train import train_step as ts
+
+    layout = ts._bucket_layout(setup)
+    n_dev = ts._n_devices(setup)
+    comp = setup.agg_cfg.build()
+
+    def fn(key):
+        return None
+
+    params, _ = setup.model.abstract_init(setup.ctx)
+    state = {"step": jax.ShapeDtypeStruct((), jnp.int32), "params": params}
+    if setup.zero1:
+        shard_lens = [ts._zero1_shard_len(setup, s) for s in layout.sizes]
+        state["opt"] = {
+            "t": jax.ShapeDtypeStruct((), jnp.int32),
+            "buckets": tuple(
+                {"master": jax.ShapeDtypeStruct((sl * n_dev,),
+                                                jnp.float32),
+                 "m": jax.ShapeDtypeStruct((sl * n_dev,), jnp.float32),
+                 "v": jax.ShapeDtypeStruct((sl * n_dev,), jnp.float32)}
+                for sl in shard_lens)}
+    else:
+        from repro.train import optimizer as opt_mod
+        opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg,
+                           setup.param_specs)
+        state["opt"] = jax.eval_shape(opt.init, params)
+    if setup.agg_cfg.compressor != "none" and setup.agg_cfg.compress_axes:
+        sts = []
+        for i, n in enumerate(ts._agg_sizes(setup, layout)):
+            st = jax.eval_shape(lambda k: comp.init_state(n, k),
+                                jax.random.key(0))
+            sts.append(jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_dev,) + s.shape, s.dtype),
+                st))
+        state["agg"] = tuple(sts)
+    else:
+        state["agg"] = ()
+    return state

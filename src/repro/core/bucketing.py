@@ -1,0 +1,83 @@
+"""Gradient bucketing — the PyTorch-DDP "25 MB bucket" mechanism (paper §2.2).
+
+A gradient pytree is raveled into one flat vector and split into fixed-byte
+buckets.  Aggregation (raw all-reduce or a compressor) runs per bucket; the
+result is unraveled back to the original pytree.  Bucket boundaries are purely
+byte-based (layer-agnostic), matching PyTorch DDP's behaviour that the paper
+benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Static description of how a pytree maps onto buckets."""
+    n_elements: int            # total (unpadded) element count
+    bucket_elems: int          # elements per full bucket
+    n_buckets: int
+    dtype: Any
+    sizes: tuple[int, ...]     # per-bucket element counts (last may be short)
+
+    @property
+    def last_elems(self) -> int:
+        return self.sizes[-1]
+
+
+def layout_for(tree, bucket_mb: float) -> BucketLayout:
+    """Bucket dtype = the dtype holding the most bytes (mixed-precision
+    trees — bf16 working params + a few fp32 scalars under ZeRO-1 — ride
+    the majority dtype; minority leaves round-trip through it)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    assert leaves, "empty gradient tree"
+    by_dtype: dict = {}
+    for l in leaves:
+        by_dtype[jnp.dtype(l.dtype)] = by_dtype.get(jnp.dtype(l.dtype), 0) \
+            + int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    dtype = max(by_dtype, key=by_dtype.get)
+    n = sum(int(np.prod(l.shape)) for l in leaves)
+    itemsize = jnp.dtype(dtype).itemsize
+    bucket_elems = max(1, int(bucket_mb * 2**20) // itemsize)
+    n_buckets = -(-n // bucket_elems)
+    sizes = [bucket_elems] * (n_buckets - 1)
+    sizes.append(n - bucket_elems * (n_buckets - 1))
+    return BucketLayout(n, bucket_elems, n_buckets, dtype, tuple(sizes))
+
+
+def to_buckets(tree, layout: BucketLayout) -> list[jax.Array]:
+    """Ravel a pytree into its list of 1-D buckets (cast to bucket dtype)."""
+    flat = jnp.concatenate(
+        [l.reshape(-1).astype(layout.dtype)
+         for l in jax.tree_util.tree_leaves(tree)])
+    assert flat.shape[0] == layout.n_elements
+    out, off = [], 0
+    for s in layout.sizes:
+        out.append(jax.lax.dynamic_slice_in_dim(flat, off, s))
+        off += s
+    return out
+
+
+def from_buckets(buckets: list[jax.Array], tree_like, layout: BucketLayout):
+    """Inverse of :func:`to_buckets` (shapes/dtypes from ``tree_like``)."""
+    flat = jnp.concatenate([b.astype(layout.dtype) for b in buckets])
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    out, off = [], 0
+    for l in leaves:
+        size = int(np.prod(l.shape))
+        out.append(jax.lax.dynamic_slice_in_dim(flat, off, size)
+                   .reshape(l.shape).astype(l.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def map_buckets(fn: Callable, tree, layout: BucketLayout):
+    """Apply ``fn(bucket_index, bucket) -> bucket`` and rebuild the pytree."""
+    buckets = to_buckets(tree, layout)
+    buckets = [fn(i, b) for i, b in enumerate(buckets)]
+    return from_buckets(buckets, tree, layout)

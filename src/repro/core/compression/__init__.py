@@ -1,0 +1,1 @@
+from repro.core.compression.base import Compressor, from_plan, make  # noqa: F401

@@ -1,0 +1,92 @@
+"""Compressor API.
+
+A compressor owns one stage of the gradient-aggregation path:
+
+    aggregate(bucket, state, axes) -> (mean_bucket, new_state)
+
+``bucket`` is the local 1-D gradient (or gradient-shard) vector; ``axes`` are
+the mesh axis names to average over.  The call happens *inside* ``shard_map``,
+so implementations use ``jax.lax`` collectives directly — this is the JAX
+analogue of a PyTorch DDP communication hook (paper §3.1).
+
+Each compressor also carries its analytical cost hooks so the performance
+model (paper §4 / App. B) can reason about it without running it:
+``compressed_bytes`` (wire bytes per device per aggregation) and
+``encode_decode_flops`` (paper's T_encode-decode, up to a hardware constant).
+
+``all_reduce_compatible`` mirrors the paper's Table 3: associative schemes
+aggregate with all-reduce-style cost (constant in p); the rest degrade to
+all-gather (linear in p).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+AxisNames = Sequence[str]
+
+
+def axis_size(axes: AxisNames) -> jax.Array:
+    return jax.lax.psum(1, tuple(axes))
+
+
+class Compressor:
+    name: str = "abstract"
+    all_reduce_compatible: bool = True
+
+    def init_state(self, n: int, key: jax.Array) -> Any:
+        """Per-bucket persistent state (error feedback, warm-start, rng)."""
+        return ()
+
+    def aggregate(self, bucket: jax.Array, state: Any, axes: AxisNames):
+        raise NotImplementedError
+
+    # ---- perf-model hooks (bytes / flops are per device, per step) ----
+    def compressed_bytes(self, n: int, itemsize: int = 4) -> float:
+        """Wire payload per aggregation (one direction)."""
+        return n * itemsize
+
+    def encode_decode_flops(self, n: int) -> float:
+        return 0.0
+
+    def compression_ratio(self, n: int, itemsize: int = 4) -> float:
+        return (n * itemsize) / max(self.compressed_bytes(n, itemsize), 1e-9)
+
+
+def mean_over(x: jax.Array, axes: AxisNames) -> jax.Array:
+    return jax.lax.pmean(x, tuple(axes))
+
+
+def make(name: str, **kw) -> Compressor:
+    """Factory: ``make('powersgd', rank=4)`` etc."""
+    from repro.core.compression import (mstopk, none, powersgd, qsgd, randomk,
+                                        signsgd, terngrad)
+    table = {
+        "none": none.NoCompression,
+        "powersgd": powersgd.PowerSGD,
+        "signsgd": signsgd.SignSGDMajorityVote,
+        "mstopk": mstopk.MSTopK,
+        "randomk": randomk.RandomK,
+        "qsgd": qsgd.QSGD,
+        "terngrad": terngrad.TernGrad,
+    }
+    if name not in table:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(table)}")
+    return table[name](**kw)
+
+
+def from_plan(plan) -> Compressor:
+    """Build the compressor described by a ``ParallelPlan``."""
+    kw: dict = {}
+    if plan.compression == "powersgd":
+        kw = dict(rank=plan.powersgd_rank)
+    elif plan.compression == "mstopk":
+        kw = dict(frac=plan.topk_frac, error_feedback=plan.error_feedback)
+    elif plan.compression == "qsgd":
+        kw = dict(bits=plan.qsgd_bits, error_feedback=plan.error_feedback)
+    elif plan.compression in ("signsgd", "randomk", "terngrad"):
+        kw = dict(error_feedback=plan.error_feedback)
+    return make(plan.compression, **kw)

@@ -1,0 +1,21 @@
+"""syncSGD baseline: raw (uncompressed) all-reduce mean — the paper's winner
+in the data-center regime."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.compression.base import AxisNames, Compressor
+
+
+class NoCompression(Compressor):
+    name = "none"
+    all_reduce_compatible = True
+
+    def aggregate(self, bucket, state, axes: AxisNames):
+        return jax.lax.pmean(bucket, tuple(axes)), state
+
+    def compressed_bytes(self, n, itemsize=4):
+        return n * itemsize
+
+    def encode_decode_flops(self, n):
+        return 0.0

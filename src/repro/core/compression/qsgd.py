@@ -1,0 +1,71 @@
+"""QSGD (Alistarh et al., 2017) — stochastic uniform quantization.
+
+NOT all-reduce compatible (paper Table 3): re-quantization after summation is
+lossy and NCCL-style reducers don't support the custom dtype, so aggregation
+all-gathers int levels + per-bucket norms and dequantizes locally.
+
+Unbiased: E[decode(encode(g))] = g (property-tested).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import AxisNames, Compressor
+
+
+class QSGDState(NamedTuple):
+    key: jax.Array
+    err: jax.Array
+
+
+class QSGD(Compressor):
+    all_reduce_compatible = False
+
+    def __init__(self, bits: int = 8, error_feedback: bool = False):
+        assert 2 <= bits <= 8
+        self.bits = bits
+        self.levels = 2 ** (bits - 1) - 1  # signed levels
+        self.error_feedback = error_feedback
+        self.name = f"qsgd-{bits}b"
+
+    def init_state(self, n: int, key: jax.Array) -> QSGDState:
+        return QSGDState(
+            key=key,
+            err=jnp.zeros((n,) if self.error_feedback else (1,), jnp.float32))
+
+    def _encode(self, g: jax.Array, key: jax.Array):
+        from repro.kernels import ops as kops
+        norm = jnp.linalg.norm(g) + 1e-12
+        q = kops.qsgd_quantize(g, norm, self.levels, key)  # int8 levels
+        return q, norm
+
+    def _decode(self, q: jax.Array, norm: jax.Array):
+        return q.astype(jnp.float32) * (norm / self.levels)
+
+    def aggregate(self, bucket: jax.Array, state: QSGDState, axes: AxisNames):
+        key, sub = jax.random.split(state.key)
+        # distinct stochastic rounding per device
+        sub = jax.random.fold_in(sub, jax.lax.axis_index(tuple(axes)))
+        g = bucket.astype(jnp.float32)
+        if self.error_feedback:
+            g = g + state.err
+        q, norm = self._encode(g, sub)
+        gq = jax.lax.all_gather(q, tuple(axes))          # (p, n) int8
+        gn = jax.lax.all_gather(norm, tuple(axes))       # (p,)
+        p = gq.shape[0]
+        out = jnp.einsum("pn,p->n", gq.astype(jnp.float32),
+                         gn / self.levels) / p
+        if self.error_feedback:
+            new_err = g - self._decode(q, norm)
+        else:
+            new_err = state.err
+        return out.astype(bucket.dtype), QSGDState(key=key, err=new_err)
+
+    def compressed_bytes(self, n, itemsize=4):
+        return n * self.bits / 8 + 4  # levels + norm, per peer
+
+    def encode_decode_flops(self, n):
+        return 6.0 * n

@@ -1,0 +1,66 @@
+"""Random-k sparsification (Wangni et al., 2018).
+
+All-reduce compatible (paper Table 3): every worker selects the SAME k random
+coordinates (shared seed folded with the step counter), so the sparse
+aggregate is a plain psum over a dense length-k vector — cost constant in p.
+
+``rescale=True`` gives the unbiased estimator (×n/k); with error feedback the
+common practice is no rescale (the residual re-injects the mass).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import AxisNames, Compressor
+
+
+class RandomKState(NamedTuple):
+    key: jax.Array
+    err: jax.Array
+
+
+class RandomK(Compressor):
+    all_reduce_compatible = True
+
+    def __init__(self, frac: float = 0.01, rescale: bool = False,
+                 error_feedback: bool = True):
+        self.frac = frac
+        self.rescale = rescale
+        self.error_feedback = error_feedback
+        self.name = f"randomk-{frac:g}"
+
+    def k_for(self, n: int) -> int:
+        return max(1, int(n * self.frac))
+
+    def init_state(self, n: int, key: jax.Array) -> RandomKState:
+        return RandomKState(
+            key=key,
+            err=jnp.zeros((n,) if self.error_feedback else (1,), jnp.float32))
+
+    def aggregate(self, bucket: jax.Array, state: RandomKState,
+                  axes: AxisNames):
+        n = bucket.shape[0]
+        k = self.k_for(n)
+        key, sub = jax.random.split(state.key)
+        idx = jax.random.permutation(sub, n)[:k]   # identical on all devices
+        g = bucket.astype(jnp.float32)
+        if self.error_feedback:
+            g = g + state.err
+        vals = jax.lax.pmean(g[idx], tuple(axes))
+        scale = (n / k) if self.rescale else 1.0
+        out = jnp.zeros((n,), jnp.float32).at[idx].set(vals * scale)
+        if self.error_feedback:
+            own = jnp.zeros((n,), jnp.float32).at[idx].set(g[idx] * scale)
+            new_err = g - own
+        else:
+            new_err = state.err
+        return out.astype(bucket.dtype), RandomKState(key=key, err=new_err)
+
+    def compressed_bytes(self, n, itemsize=4):
+        return self.k_for(n) * 4  # values only; indices derived from seed
+
+    def encode_decode_flops(self, n):
+        return 4.0 * n  # permutation + gather/scatter ~ O(n)

@@ -1,0 +1,58 @@
+"""TernGrad (Wen et al., 2017) — stochastic ternarization {-1, 0, +1}·s.
+
+NOT all-reduce compatible (paper Table 3): per-worker scales differ, so
+aggregation all-gathers int8 ternaries + scales.  Unbiased by construction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import AxisNames, Compressor
+
+
+class TernGradState(NamedTuple):
+    key: jax.Array
+    err: jax.Array
+
+
+class TernGrad(Compressor):
+    name = "terngrad"
+    all_reduce_compatible = False
+
+    def __init__(self, error_feedback: bool = False):
+        self.error_feedback = error_feedback
+
+    def init_state(self, n: int, key: jax.Array) -> TernGradState:
+        return TernGradState(
+            key=key,
+            err=jnp.zeros((n,) if self.error_feedback else (1,), jnp.float32))
+
+    def aggregate(self, bucket: jax.Array, state: TernGradState,
+                  axes: AxisNames):
+        key, sub = jax.random.split(state.key)
+        sub = jax.random.fold_in(sub, jax.lax.axis_index(tuple(axes)))
+        g = bucket.astype(jnp.float32)
+        if self.error_feedback:
+            g = g + state.err
+        scale = jnp.max(jnp.abs(g)) + 1e-12
+        prob = jnp.abs(g) / scale
+        bern = jax.random.bernoulli(sub, prob).astype(jnp.int8)
+        tern = (jnp.sign(g).astype(jnp.int8) * bern)
+        gt = jax.lax.all_gather(tern, tuple(axes))
+        gs = jax.lax.all_gather(scale, tuple(axes))
+        p = gt.shape[0]
+        out = jnp.einsum("pn,p->n", gt.astype(jnp.float32), gs) / p
+        if self.error_feedback:
+            new_err = g - tern.astype(jnp.float32) * scale
+        else:
+            new_err = state.err
+        return out.astype(bucket.dtype), TernGradState(key=key, err=new_err)
+
+    def compressed_bytes(self, n, itemsize=4):
+        return n * 2 / 8 + 4  # 2 bits/element + scale, per peer
+
+    def encode_decode_flops(self, n):
+        return 5.0 * n

@@ -1,0 +1,1 @@
+from repro.core.perfmodel import calibration, costs, hardware, model, roofline, whatif  # noqa: F401

@@ -1,0 +1,125 @@
+"""Paper-published constants + fitted calibration (App. C methodology).
+
+Directly published (Table 2, ResNet-50 @ V100 bs64):
+    backward ≈ 122 ms; encode-decode: PowerSGD r4/r8/r16 = 45/64/130 ms,
+    MSTop-K 1%/0.1% = 103/104 ms, SignSGD = 16.34 ms.
+Model sizes (§3): ResNet-50 97 MB, ResNet-101 170 MB, BERT_BASE 418 MB.
+
+Published end-to-end anchors (96 GPUs, 10 Gb/s):
+    syncSGD ResNet-101 ≈ 262 ms; SignSGD ResNet-101 ≈ 1042 ms;
+    PowerSGD ResNet-101 ≈ 470 ms (rank unspecified in the text);
+    BERT gap-to-linear ≈ 200 ms (Fig. 9);
+    crossover bandwidth ≈ 8.2 Gb/s (Fig. 3: R101, bs64, 64 GPUs, rank-4).
+
+Constants the paper measured but did not publish (T_comp / T_enc-dec for
+ResNet-101 and BERT) are FITTED here to the anchor set and documented; the
+per-model encode-decode times scale Table 2 by parameter bytes with a
+kernel-launch-overhead factor (deeper nets pay more per-tensor launches,
+App. E notes per-tensor JIT'd compression).
+
+Known tension in the published numbers (documented, not hidden): the
+"PowerSGD 470 ms" quote is inconsistent with Fig. 8's "rank-4 only 6.3%
+slower than syncSGD at bs64/96 GPUs" under ANY constant assignment in the
+paper's own model; we treat 470 ms as a rank-8..16 observation and verify it
+falls inside our predicted band for those ranks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.perfmodel.hardware import V100_EC2, Hardware
+from repro.core.perfmodel.model import CompressionSpec, Workload
+
+MB = 2**20
+
+# ---- published sizes / times ------------------------------------------------
+RESNET50_BYTES = 97 * MB
+RESNET101_BYTES = 170 * MB
+BERT_BYTES = 418 * MB
+
+TABLE2_ENCODE_DECODE_MS = {           # ResNet-50, V100 (paper Table 2)
+    "powersgd-r4": 45.0,
+    "powersgd-r8": 64.0,
+    "powersgd-r16": 130.0,
+    "mstopk-0.01": 103.0,
+    "mstopk-0.001": 104.0,
+    "signsgd": 16.34,
+}
+TABLE2_RATIOS = {
+    "powersgd-r4": 72.0, "powersgd-r8": 37.0, "powersgd-r16": 19.0,
+    "mstopk-0.01": 100.0, "mstopk-0.001": 1000.0, "signsgd": 32.0,
+}
+
+T_COMP_RESNET50 = 0.122               # paper Table 2 caption
+
+# ---- fitted constants (documented derivation in module docstring) -----------
+T_COMP_RESNET101 = 0.210              # ≈1.7× ResNet-50 (param & depth ratio)
+T_COMP_BERT = 0.550                   # fits Fig. 9's 200 ms gap at 96 GPUs
+# encode-decode launch-overhead factor, fitted to the paper's end-to-end
+# claims: ResNet-101's many small conv tensors pay MORE per-byte overhead
+# than ResNet-50 (1.5x); BERT's few large matmul-shaped tensors amortize
+# launches far better (0.35x) — fitted to Fig 5's "+18.8% (r4) / +11.3%
+# (r8) at 96 GPUs" which is impossible under byte-proportional scaling.
+LAUNCH_OVERHEAD = {"resnet101": 1.5, "bert": 0.35}
+
+PAPER_HW: Hardware = dataclasses.replace(
+    V100_EC2, alpha=10e-6, allgather_congestion=2.0)
+
+# ---- workloads ---------------------------------------------------------------
+RESNET50 = Workload("resnet50", RESNET50_BYTES, T_COMP_RESNET50)
+RESNET101 = Workload("resnet101", RESNET101_BYTES, T_COMP_RESNET101)
+BERT = Workload("bert-base", BERT_BYTES, T_COMP_BERT)
+WORKLOADS = {w.name: w for w in (RESNET50, RESNET101, BERT)}
+
+
+def batch_scaled(w: Workload, batch: int, base_batch: int = 64) -> Workload:
+    """Weak scaling: T_comp ∝ per-worker batch (paper §3.3)."""
+    return dataclasses.replace(w, name=f"{w.name}-bs{batch}",
+                               t_comp=w.t_comp * batch / base_batch)
+
+
+def encode_decode_time(method: str, workload: Workload) -> float:
+    """Scale Table 2 to other models: bytes-proportional × launch overhead."""
+    base_ms = TABLE2_ENCODE_DECODE_MS[method]
+    scale = workload.model_bytes / RESNET50_BYTES
+    overhead = 1.0
+    if workload.name.startswith("resnet101"):
+        overhead = LAUNCH_OVERHEAD["resnet101"]
+    elif workload.name.startswith("bert"):
+        overhead = LAUNCH_OVERHEAD["bert"]
+    return base_ms * 1e-3 * scale * overhead
+
+
+def paper_spec(method: str, workload: Workload) -> CompressionSpec:
+    """CompressionSpec for a paper-studied method on a paper workload."""
+    t_ed = encode_decode_time(method, workload)
+    ratio = TABLE2_RATIOS[method]
+    payload = workload.model_bytes / ratio
+    if method.startswith("powersgd"):
+        # two all-reduces (P and Q), ~half the payload each
+        return CompressionSpec(method, t_ed, (payload / 2, payload / 2), True)
+    if method.startswith("mstopk"):
+        # values + indices all-gathers (each half of the 8B/element payload)
+        return CompressionSpec(method, t_ed, (payload / 2, payload / 2), False)
+    if method == "signsgd":
+        return CompressionSpec(method, t_ed, (payload,), False)
+    raise KeyError(method)
+
+
+def spec_from_compressor(comp, n_elements: int, t_encode_decode: float,
+                         itemsize: int = 4) -> CompressionSpec:
+    """Bridge: build a perf-model spec from a live Compressor instance."""
+    total = comp.compressed_bytes(n_elements, itemsize)
+    return CompressionSpec(comp.name, t_encode_decode, (total,),
+                           comp.all_reduce_compatible)
+
+
+# ---- published end-to-end anchors (for verification) ------------------------
+ANCHORS = {
+    # (workload, method, p) -> observed seconds
+    ("resnet101", "syncsgd", 96): 0.262,
+    ("resnet101", "signsgd", 96): 1.042,
+    ("resnet101", "powersgd-r8..r16", 96): 0.470,
+    ("bert-base", "gap_to_linear", 96): 0.200,
+    ("resnet101", "crossover_gbps_r4_64gpu", 64): 8.2,
+}

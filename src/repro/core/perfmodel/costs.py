@@ -1,0 +1,64 @@
+"""α–β collective cost models (paper Table 1 + Eq. 1).
+
+All sizes in bytes, times in seconds.  ``bw`` is bytes/s per device (one
+direction), ``alpha`` the per-hop latency.
+"""
+from __future__ import annotations
+
+import math
+
+
+def ring_all_reduce(n: float, p: int, bw: float, alpha: float) -> float:
+    """Paper Eq. 1: T = 2α(p-1) + 2·n·(p-1)/(p·BW)."""
+    if p <= 1:
+        return 0.0
+    return 2 * alpha * (p - 1) + 2 * n * (p - 1) / (p * bw)
+
+
+def tree_all_reduce(n: float, p: int, bw: float, alpha: float) -> float:
+    """Paper Table 1: latency 2α·log p, bandwidth 2β·n·log p."""
+    if p <= 1:
+        return 0.0
+    lg = math.log2(p)
+    return 2 * alpha * lg + 2 * n * lg / bw
+
+
+def parameter_server(n: float, p: int, bw: float, alpha: float) -> float:
+    """Paper Table 1: 2α + 2β(p-1)n (server-side bandwidth bound)."""
+    if p <= 1:
+        return 0.0
+    return 2 * alpha + 2 * n * (p - 1) / bw
+
+
+def all_gather(n: float, p: int, bw: float, alpha: float,
+               congestion: float = 1.0) -> float:
+    """Each device receives (p-1)·n bytes (paper App. B:
+    T = n̂(p-1)/BW), optionally inflated by the incast congestion factor
+    the paper observes for NCCL all-gather on EC2 (App. C)."""
+    if p <= 1:
+        return 0.0
+    return alpha * (p - 1) + congestion * n * (p - 1) / bw
+
+
+def reduce_scatter(n: float, p: int, bw: float, alpha: float) -> float:
+    """Ring reduce-scatter of an n-byte vector: n·(p-1)/(p·BW)."""
+    if p <= 1:
+        return 0.0
+    return alpha * (p - 1) + n * (p - 1) / (p * bw)
+
+
+def all_to_all(n: float, p: int, bw: float, alpha: float) -> float:
+    """n local bytes redistributed: n·(p-1)/(p·BW) per direction."""
+    if p <= 1:
+        return 0.0
+    return alpha * (p - 1) + n * (p - 1) / (p * bw)
+
+
+COLLECTIVES = {
+    "ring_all_reduce": ring_all_reduce,
+    "tree_all_reduce": tree_all_reduce,
+    "parameter_server": parameter_server,
+    "all_gather": all_gather,
+    "reduce_scatter": reduce_scatter,
+    "all_to_all": all_to_all,
+}

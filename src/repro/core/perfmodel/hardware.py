@@ -1,0 +1,62 @@
+"""Hardware presets for the performance model and the roofline.
+
+Two families:
+  * the paper's setting (V100 + 10 Gb/s EC2, NCCL ring) — used to reproduce
+    the paper's figures;
+  * TPU v5e pods — used by the dry-run roofline (constants fixed by the
+    assignment: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # FLOP/s per device (paper's units: fp32; TPU: bf16)
+    hbm_bw: float              # bytes/s per device
+    # interconnect used by the DP all-reduce
+    net_bw: float              # bytes/s per device, one direction
+    alpha: float               # per-hop latency (s)
+    # all-gather congestion factor (paper App. C: incast on EC2 TCP; 1.0 = none)
+    allgather_congestion: float = 1.0
+    # secondary (cross-pod) network, bytes/s per device; 0 = single-tier
+    dcn_bw: float = 0.0
+
+    def scaled(self, compute: float = 1.0, bandwidth: float = 1.0,
+               name: str | None = None) -> "Hardware":
+        """What-if scaling (paper Figs 17/18)."""
+        return dataclasses.replace(
+            self, name=name or f"{self.name}×c{compute:g}b{bandwidth:g}",
+            peak_flops=self.peak_flops * compute,
+            hbm_bw=self.hbm_bw * compute,
+            net_bw=self.net_bw * bandwidth)
+
+    def with_net(self, gbps: float) -> "Hardware":
+        return dataclasses.replace(self, name=f"{self.name}@{gbps:g}Gbps",
+                                   net_bw=gbps * 1e9 / 8)
+
+
+# ---- the paper's cluster: p3.8xlarge, 4×V100, ~10 Gb/s per instance ----
+V100_EC2 = Hardware(
+    name="v100-ec2-10gbps",
+    peak_flops=15.7e12,        # V100 fp32 (the paper trains fp32)
+    hbm_bw=900e9,
+    net_bw=10e9 / 8,           # 10 Gb/s -> bytes/s
+    alpha=25e-6,               # fitted per App. C methodology (see calibration)
+    allgather_congestion=1.5,  # App. C: incast degrades all-gather (~19% err)
+)
+
+# ---- TPU v5e (assignment constants) ----
+TPU_V5E = Hardware(
+    name="tpu-v5e",
+    peak_flops=197e12,         # bf16
+    hbm_bw=819e9,
+    net_bw=50e9,               # ~50 GB/s per ICI link (2D torus axis)
+    alpha=1e-6,                # ICI hop latency ~ 1 µs
+    allgather_congestion=1.0,  # torus all-gather is deterministic ring traffic
+    dcn_bw=3.125e9,            # inter-pod DCN per chip (25 GB/s per 8-chip host)
+)
+
+PRESETS = {h.name: h for h in (V100_EC2, TPU_V5E)}

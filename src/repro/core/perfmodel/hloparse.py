@@ -1,0 +1,388 @@
+"""Post-optimization HLO text parser for the roofline (DESIGN.md §6).
+
+Why not ``compiled.cost_analysis()``?  XLA's aggregate counts every while
+BODY exactly once — but our stacks scan over layers, so a 64-layer model
+would be under-counted 64×.  This parser walks the computation graph,
+reads each while's ``backend_config={"known_trip_count":{"n":..}}`` and
+multiplies op costs by the product of enclosing trip counts.
+
+Per-op accounting (operand shapes resolved through a per-computation
+name -> type map):
+
+  * FLOPs:   dot ops (2 · prod(result dims) · prod(contraction dims)) —
+             matmuls are >99% of model FLOPs here; convolutions are absent.
+  * bytes:   fusion-boundary traffic — Σ (result + operand bytes) over
+             materializing opcodes (fusions, dots, copies, slices,
+             collectives...), the same boundary XLA's own analysis uses.
+  * collectives: per-op effective wire bytes under ring algorithms, with
+             replica-group analysis to attribute each op to intra-pod ICI
+             or the cross-pod DCN axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f4e2m1fn": 1, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^=]*?\)|[^(]*?)"
+    r"\s+(?P<opcode>[\w\-]+)\((?P<rest>.*)$")
+# computation header: "%region_0.2 (arg: (s32[], ...)) -> (...) {"
+# (param lists nest parens, so match only the name and require "-> ... {")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{"n":\s*"(\d+)"')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(?P<g>\d+),(?P<s>\d+)\]<=\[(?P<dims>[0-9,]+)\]"
+    r"(?:T\((?P<perm>[0-9,]+)\))?")
+
+# opcodes whose operands+results count as HBM traffic (fusion boundaries)
+_TRAFFIC_OPS = {
+    "fusion", "dot", "copy", "convert", "dynamic-slice",
+    "dynamic-update-slice", "slice", "concatenate", "broadcast", "reduce",
+    "transpose", "reverse", "gather", "scatter", "pad", "select",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "reduce-scatter-start", "collective-permute-start", "add", "multiply",
+    "subtract", "divide", "exponential", "tanh", "rsqrt", "maximum",
+    "minimum", "compare", "iota", "sort", "rng-bit-generator", "cumsum",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "ragged-all-to-all", "collective-permute"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group("dims").split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group("dims").split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict            # name -> Op
+    order: list          # op names in order
+    param_types: dict    # name -> type str
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        # long tuple types carry /*index=N*/ comments whose '=' breaks the
+        # op regex — strip them first
+        line = _COMMENT_RE.sub("", raw.rstrip())
+        stripped = line.strip()
+        if not stripped:
+            continue
+        mc = _COMP_RE.match(line)
+        if mc and stripped.endswith("{") and "->" in stripped \
+                and "=" not in stripped.split("->")[0]:
+            cur = Computation(mc.group("name"), {}, [], {})
+            comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            # keep cur; nested braces don't occur at op level
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        name = mo.group("name")
+        opcode = mo.group("opcode")
+        rest = mo.group("rest")
+        # operands: %names inside the first (...) — cut at the matching
+        # close paren by scanning depth
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = rest[:end]
+        operands = _OPERAND_RE.findall(operand_str)
+        op = Op(name=name, type_str=mo.group("type"), opcode=opcode,
+                line=stripped, operands=operands)
+        cur.ops[name] = op
+        cur.order.append(name)
+        if opcode == "parameter":
+            cur.param_types[name] = mo.group("type")
+    return comps
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """computation name -> product of enclosing while trip counts."""
+    # edges: computation -> (child computation, multiplier)
+    children: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    called: set[str] = set()
+    for cname, comp in comps.items():
+        for opn in comp.order:
+            op = comp.ops[opn]
+            if op.opcode == "while":
+                n = 1.0
+                mt = _TRIP_RE.search(op.line)
+                if mt:
+                    n = float(mt.group(1))
+                mb = _BODY_RE.search(op.line)
+                mcond = _COND_RE.search(op.line)
+                if mb:
+                    children[cname].append((mb.group(1), n))
+                    called.add(mb.group(1))
+                if mcond:
+                    children[cname].append((mcond.group(1), n))
+                    called.add(mcond.group(1))
+            elif op.opcode in ("call", "conditional", "async-start"):
+                for mcall in _CALLS_RE.finditer(op.line):
+                    children[cname].append((mcall.group(1), 1.0))
+                    called.add(mcall.group(1))
+            # NOTE: fusion/reduce/sort to_apply subcomputations are
+            # intentionally NOT descended into (internal to the op).
+
+    mult: dict[str, float] = {}
+    roots = [c for c in comps if c not in called]
+
+    def visit(c: str, m: float):
+        mult[c] = max(mult.get(c, 0.0), m)
+        for child, k in children.get(c, []):
+            visit(child, m * k)
+
+    for r in roots:
+        visit(r, 1.0)
+    return mult
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_elems = 1
+    for d in _type_dims(op.type_str):
+        out_elems *= d
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    contract = 1
+    if mdims and op.operands:
+        lhs = comp.ops.get(op.operands[0])
+        lhs_type = lhs.type_str if lhs else \
+            comp.param_types.get(op.operands[0], "")
+        dims = _type_dims(lhs_type)
+        for idx in mdims.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _op_bytes(comp: Computation, op: Op) -> float:
+    """HBM traffic of one op.  Slicing ops touch only the slice, not the
+    whole operand buffer (a dynamic-slice of a 10 GB cache reads the slice;
+    dynamic-update-slice is a read-modify-write of the region when aliased
+    in place)."""
+    res = _type_bytes(op.type_str)
+    if op.opcode in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * res                       # read slice + write result
+    if op.opcode in ("dynamic-update-slice", "scatter"):
+        upd = 0.0
+        if len(op.operands) >= 2:
+            src = comp.ops.get(op.operands[1])
+            t = src.type_str if src else comp.param_types.get(
+                op.operands[1], "")
+            upd = _type_bytes(t)
+        return 2.0 * max(upd, 1.0)             # write region (+ read-mod)
+    # in-place accumulator fusions (a dynamic-update-slice fused into the
+    # body): result type == one operand's type and ≫ the actual update —
+    # charge 2× the largest OTHER operand (the touched region)
+    total = float(res)
+    operand_bytes = []
+    for o in op.operands:
+        src = comp.ops.get(o)
+        b = _type_bytes(src.type_str) if src is not None else \
+            _type_bytes(comp.param_types.get(o, ""))
+        is_state = src is None or (src is not None and src.opcode in
+                                   ("get-tuple-element", "parameter"))
+        operand_bytes.append((b, is_state,
+                              (src.type_str if src else
+                               comp.param_types.get(o, ""))))
+    in_place = False
+    if op.opcode == "fusion":
+        same = [b for b, _, t in operand_bytes
+                if t.strip() == op.type_str.strip()]
+        others = [b for b, _, t in operand_bytes
+                  if t.strip() != op.type_str.strip()]
+        if same and others and res > 32 * max(others):
+            # read-modify-write of a region ≈ 2× the update payload
+            total = 4.0 * max(others)
+            in_place = True
+    for b, is_state, t in operand_bytes:
+        if in_place and t.strip() == op.type_str.strip():
+            continue                           # covered by the RMW charge
+        if op.opcode == "fusion" and is_state and res > 0 \
+                and b > 32 * res:
+            # fusion consuming a whole loop-carried buffer while emitting
+            # ≪ its size: it slices internally (scan xs / cache reads) —
+            # charge the touched region, not the buffer
+            b = 2.0 * res
+        total += b
+    return total
+
+
+def _first_group(line: str) -> Optional[list[int]]:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return [int(x) for x in m.group(1).replace(" ", "").split(",") if x]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group("dims").split(",")]
+        n = int(np.prod(dims))
+        order = np.arange(n).reshape(dims)
+        if m.group("perm"):
+            perm = [int(x) for x in m.group("perm").split(",")]
+            order = order.transpose(perm)
+        flat = order.reshape(-1)
+        s = int(m.group("s"))
+        return [int(x) for x in flat[:s]]
+    return None
+
+
+def _collective_wire_bytes(op: Op, group_size: int) -> float:
+    """Per-device effective wire bytes under ring algorithms."""
+    g = group_size
+    if g <= 1:
+        return 0.0
+    b = _type_bytes(op.type_str)
+    base = op.opcode.replace("-start", "")
+    if base == "all-reduce":
+        return 2.0 * b * (g - 1) / g
+    if base == "all-gather":
+        return b * (g - 1) / g            # result = gathered tensor
+    if base == "reduce-scatter":
+        return b * (g - 1)                # result = local shard
+    if base in ("all-to-all", "ragged-all-to-all"):
+        return b * (g - 1) / g
+    if base == "collective-permute":
+        return float(b)
+    return float(b)
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float = 0.0                    # per device
+    traffic_bytes: float = 0.0            # per device (fusion-boundary)
+    collective_bytes_intra: float = 0.0   # per device, within-pod groups
+    collective_bytes_cross: float = 0.0   # per device, cross-pod groups
+    collective_count: dict = dataclasses.field(default_factory=dict)
+    dot_flops_by_shape: dict = dataclasses.field(default_factory=dict)
+    warnings: list = dataclasses.field(default_factory=list)
+
+
+def analyze_hlo(text: str, *, pod_stride: int = 0,
+                n_pods: int = 1) -> ModuleCosts:
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+    out = ModuleCosts()
+    seen_done: set[str] = set()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 1.0)
+        for opn in comp.order:
+            op = comp.ops[opn]
+            base = op.opcode.replace("-start", "")
+            if op.opcode.endswith("-done"):
+                continue
+            if op.opcode == "dot":
+                f = _dot_flops(comp, op)
+                out.flops += m * f
+                key = op.type_str.strip()
+                out.dot_flops_by_shape[key] = \
+                    out.dot_flops_by_shape.get(key, 0.0) + m * f
+            if base in _TRAFFIC_OPS or op.opcode in _TRAFFIC_OPS:
+                out.traffic_bytes += m * _op_bytes(comp, op)
+            if base in _COLLECTIVES:
+                group = _first_group(op.line)
+                gsize = len(group) if group else 1
+                wire = _collective_wire_bytes(op, gsize)
+                out.collective_count[base] = \
+                    out.collective_count.get(base, 0) + m
+                crosses = False
+                if group and n_pods > 1 and pod_stride:
+                    pods = {d // pod_stride for d in group}
+                    crosses = len(pods) > 1
+                if crosses:
+                    out.collective_bytes_cross += m * wire
+                else:
+                    out.collective_bytes_intra += m * wire
+    return out
+
+
+def cpu_bf16_upcast_bytes(text: str, min_bytes: int = 1 << 28) -> float:
+    """Bytes of compiler-inserted whole-buffer bf16 -> f32 upcasts.
+
+    XLA:CPU legalizes bf16 dots by upconverting operands to f32 and its
+    algebraic simplifier hoists convert(dynamic-slice(stack)) into
+    dynamic-slice(convert(stack)) — materializing fp32 copies of entire
+    scan-stacked weight/activation buffers.  TPU's MXU consumes bf16
+    natively, so these buffers do not exist on the target hardware; the
+    dry-run reports them separately so bytes/device can be corrected
+    (EXPERIMENTS.md §Dry-run)."""
+    comps = parse_module(text)
+    total = 0.0
+    for comp in comps.values():
+        for opn in comp.order:
+            op = comp.ops[opn]
+            if op.opcode not in ("convert", "fusion"):
+                continue
+            res = _type_bytes(op.type_str)
+            if res < min_bytes or "f32[" not in op.type_str:
+                continue
+            if op.opcode == "fusion" and not op.name.startswith(
+                    "wrapped_convert"):
+                continue
+            # operand must be a bf16 buffer of the same element count
+            if not op.operands:
+                continue
+            src = comp.ops.get(op.operands[0])
+            src_t = src.type_str if src else comp.param_types.get(
+                op.operands[0], "")
+            if "bf16[" in src_t and _type_bytes(src_t) * 2 == res:
+                total += res
+    return total

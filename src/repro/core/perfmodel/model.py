@@ -1,0 +1,175 @@
+"""The paper's analytical performance model (§4.1 + Appendix B).
+
+syncSGD (overlap + bucketing, PyTorch DDP):
+
+    T_obs ≈ max(γ·T_comp, (k-1)·T_comm(b, p, BW)) + T_comm(b̂, p, BW)
+
+compression (best case = post-backward, paper Takeaway 1):
+
+    T_obs ≈ T_comp + T_encode-decode + Σ T_comm(compressed payloads)
+
+The model accepts either measured constants (paper reproduction path) or
+HLO-derived terms from the dry-run roofline (TPU path) — see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.perfmodel import costs
+from repro.core.perfmodel.hardware import Hardware
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A data-parallel training step, as the paper parameterizes it."""
+    name: str
+    model_bytes: float            # gradient size (fp32 in the paper)
+    t_comp: float                 # single-device backward time (s)
+    # forward time is excluded in the paper's T_obs (it measures backward +
+    # sync); keep optional for end-to-end what-ifs
+    t_fwd: float = 0.0
+
+    def scaled_compute(self, speedup: float) -> "Workload":
+        return dataclasses.replace(
+            self, t_comp=self.t_comp / speedup, t_fwd=self.t_fwd / speedup)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Perf-model view of a compressor (paper Table 2 + App. B)."""
+    name: str
+    t_encode_decode: float            # seconds, single device
+    payload_bytes: tuple[float, ...]  # per-collective wire payloads
+    all_reduce_compatible: bool
+
+    @property
+    def total_payload(self) -> float:
+        return sum(self.payload_bytes)
+
+    def compression_ratio(self, model_bytes: float) -> float:
+        return model_bytes / max(self.total_payload, 1e-12)
+
+
+GAMMA_DEFAULT = 1.05   # paper: observed 1.04–1.1
+BUCKET_BYTES_DEFAULT = 25 * 2**20
+
+
+def sync_sgd_time(w: Workload, p: int, hw: Hardware,
+                  bucket_bytes: float = BUCKET_BYTES_DEFAULT,
+                  gamma: float = GAMMA_DEFAULT) -> float:
+    """Optimized syncSGD per-iteration backward+sync time (paper §4.1)."""
+    if p <= 1:
+        return w.t_comp
+    k = max(1, math.ceil(w.model_bytes / bucket_bytes))
+    b = bucket_bytes if k > 1 else w.model_bytes
+    b_hat = w.model_bytes - (k - 1) * bucket_bytes if k > 1 else w.model_bytes
+    overlapped = (k - 1) * costs.ring_all_reduce(b, p, hw.net_bw, hw.alpha)
+    tail = costs.ring_all_reduce(b_hat, p, hw.net_bw, hw.alpha)
+    return max(gamma * w.t_comp, overlapped) + tail
+
+
+def compressed_time(w: Workload, p: int, hw: Hardware,
+                    spec: CompressionSpec) -> float:
+    """Gradient-compression per-iteration time (paper App. B).
+
+    All-reduce-compatible schemes ring-reduce each payload; the rest
+    all-gather (linear in p, with the congestion factor)."""
+    if p <= 1:
+        return w.t_comp
+    comm = 0.0
+    for payload in spec.payload_bytes:
+        if spec.all_reduce_compatible:
+            comm += costs.ring_all_reduce(payload, p, hw.net_bw, hw.alpha)
+        else:
+            comm += costs.all_gather(payload, p, hw.net_bw, hw.alpha,
+                                     hw.allgather_congestion)
+    return w.t_comp + spec.t_encode_decode + comm
+
+
+def linear_scaling_time(w: Workload) -> float:
+    """Ideal weak-scaling iteration time (= single-device backward)."""
+    return w.t_comp
+
+
+def speedup_vs_sync(w: Workload, p: int, hw: Hardware,
+                    spec: CompressionSpec, **kw) -> float:
+    return sync_sgd_time(w, p, hw, **kw) / compressed_time(w, p, hw, spec)
+
+
+def gap_to_linear(w: Workload, p: int, hw: Hardware, **kw) -> float:
+    """Paper Fig. 9: the headroom any compression scheme must fit inside."""
+    return sync_sgd_time(w, p, hw, **kw) - linear_scaling_time(w)
+
+
+def bucket_compressed_time(w: Workload, p: int, hw: Hardware, ratio: float,
+                           t_encode_decode: float = 0.0,
+                           bucket_bytes: float = BUCKET_BYTES_DEFAULT,
+                           gamma: float = GAMMA_DEFAULT) -> float:
+    """A hypothetical *overlappable* per-bucket compression scheme (paper
+    Figs 11/16): each DDP bucket is compressed by `ratio` and ring-reduced in
+    the same overlapped pipeline as syncSGD.  This is the idealized scheme
+    the paper uses to ask "how much compression would linear scaling need?"
+    (zero/low encode cost, all-reduce compatible, bucket-wise)."""
+    if p <= 1:
+        return w.t_comp
+    k = max(1, math.ceil(w.model_bytes / bucket_bytes))
+    b = (bucket_bytes if k > 1 else w.model_bytes) / ratio
+    b_hat = (w.model_bytes - (k - 1) * bucket_bytes if k > 1
+             else w.model_bytes) / ratio
+    overlapped = (k - 1) * costs.ring_all_reduce(b, p, hw.net_bw, hw.alpha)
+    tail = costs.ring_all_reduce(b_hat, p, hw.net_bw, hw.alpha)
+    return (max(gamma * w.t_comp, overlapped) + tail + t_encode_decode)
+
+
+def required_compression(w: Workload, p: int, hw: Hardware,
+                         t_encode_decode: float = 0.0,
+                         slack: float = 1.2,
+                         gamma: float = GAMMA_DEFAULT,
+                         max_ratio: float = 4096.0) -> float:
+    """Paper Figs 11/16: smallest per-bucket compression ratio achieving
+    near-linear scaling, T_obs <= slack · γ · T_comp (slack 1.2 = "within
+    20% of linear", the threshold that reproduces the paper's "≤4× even at
+    small batch" under its own α range).  Returns inf if even `max_ratio`
+    cannot reach it (latency/encode-bound)."""
+    target = slack * gamma * w.t_comp
+
+    def t(ratio: float) -> float:
+        return bucket_compressed_time(w, p, hw, ratio, t_encode_decode,
+                                      gamma=gamma)
+
+    if t(max_ratio) > target:
+        return math.inf
+    if t(1.0) <= target:
+        return 1.0
+    lo, hi = 1.0, max_ratio
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if t(mid) <= target:
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def crossover_bandwidth(w: Workload, p: int, hw: Hardware,
+                        spec: CompressionSpec,
+                        lo_gbps: float = 0.5, hi_gbps: float = 100.0,
+                        **kw) -> Optional[float]:
+    """Bandwidth (Gb/s) above which syncSGD beats the compression scheme
+    (paper Fig. 3: ≈8.2 Gb/s for ResNet-101/64 GPUs/bs64/PowerSGD-r4).
+    None if one of them dominates over the whole range."""
+    def diff(gbps: float) -> float:
+        h = hw.with_net(gbps)
+        return sync_sgd_time(w, p, h, **kw) - compressed_time(w, p, h, spec)
+    lo, hi = lo_gbps, hi_gbps
+    if diff(lo) * diff(hi) > 0:
+        return None
+    for _ in range(64):
+        mid = 0.5 * (lo + hi)
+        if diff(lo) * diff(mid) <= 0:
+            hi = mid
+        else:
+            lo = mid
+    return 0.5 * (lo + hi)

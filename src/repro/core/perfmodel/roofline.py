@@ -1,0 +1,226 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s              (per device)
+    memory term     = HLO_bytes / HBM_bw                   (per device)
+    collective term = Σ_op  effective_bytes(op) / link_bw  (per device)
+
+`cost_analysis()` supplies FLOPs / bytes; collective bytes are parsed from
+the HLO text (operand/result sizes of all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute, with replica-group stride
+analysis to attribute each op to an ICI axis or the cross-pod DCN).
+
+This is the fine-grained version of the paper's α–β model (DESIGN.md §6):
+`T_comp ≙ max(compute, memory)`, `T_comm ≙ collective`, and the same
+overlap reasoning applies — the *reported* step time bound is
+`max(compute, memory, collective)` when fully overlapped and the sum when
+serialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Optional
+
+from repro.core.perfmodel.hardware import TPU_V5E, Hardware
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f4e2m1fn": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<result>.*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|ragged-all-to-all)"
+    r"(?P<variant>-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(?P<g>\d+),(?P<s>\d+)\]<=\[(?P<dims>[0-9,]+)\]"
+    r"(?:T\((?P<perm>[0-9,]+)\))?")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_group(line: str) -> Optional[list[int]]:
+    """First replica group on the line, as device ids."""
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return [int(x) for x in m.group(1).replace(" ", "").split(",") if x]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        dims = [int(x) for x in m.group("dims").split(",")]
+        n = int(np.prod(dims))
+        order = np.arange(n).reshape(dims)
+        if m.group("perm"):
+            perm = [int(x) for x in m.group("perm").split(",")]
+            order = order.transpose(perm)
+        flat = order.reshape(-1)
+        s = int(m.group("s"))
+        return [int(x) for x in flat[:s]]
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    op: str
+    bytes_result: int
+    group: Optional[list[int]]
+    line: str
+
+    def group_size(self) -> int:
+        return len(self.group) if self.group else 1
+
+    def crosses_pod(self, pod_stride: int, n_pods: int) -> bool:
+        if n_pods <= 1 or not self.group:
+            return False
+        pods = {d // pod_stride for d in self.group}
+        return len(pods) > 1
+
+    def effective_bytes(self) -> float:
+        """Per-device wire bytes under ring algorithms."""
+        g = self.group_size()
+        if g <= 1:
+            return 0.0
+        b = self.bytes_result
+        if self.op == "all-reduce":
+            return 2.0 * b * (g - 1) / g
+        if self.op == "all-gather":
+            return b * (g - 1) / g          # result is the gathered tensor
+        if self.op == "reduce-scatter":
+            return b * (g - 1)              # result is the scattered shard
+        if self.op in ("all-to-all", "ragged-all-to-all"):
+            return b * (g - 1) / g
+        if self.op == "collective-permute":
+            return float(b)
+        return float(b)
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        # skip the -done halves; -start carries the payload
+        if re.search(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)-done", line):
+            continue
+        result = m.group("result")
+        out.append(CollectiveOp(
+            op=m.group("op"),
+            bytes_result=_shape_bytes(result),
+            group=_first_group(line),
+            line=line.strip()[:2000],
+        ))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: tuple[int, ...]
+    chips: int
+    # raw inputs
+    hlo_flops: float                 # per device
+    hlo_bytes: float                 # per device HBM traffic
+    ici_bytes: float                 # per device effective collective bytes
+    dcn_bytes: float
+    collective_count: dict
+    # terms (seconds)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    ici_s: float = 0.0
+    dcn_s: float = 0.0
+    dominant: str = ""
+    # usefulness
+    model_flops: float = 0.0         # 6·N·D (train) or 2·N·D (serve), global
+    useful_ratio: float = 0.0
+    bytes_per_device: float = 0.0    # from memory_analysis
+    note: str = ""
+    xla_cost_flops: float = 0.0      # raw cost_analysis (while bodies ×1)
+
+    def finalize(self, hw: Hardware) -> "RooflineReport":
+        self.compute_s = self.hlo_flops / hw.peak_flops
+        self.memory_s = self.hlo_bytes / hw.hbm_bw
+        self.ici_s = self.ici_bytes / hw.net_bw
+        self.dcn_s = self.dcn_bytes / hw.dcn_bw if hw.dcn_bw else 0.0
+        self.collective_s = self.ici_s + self.dcn_s
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        if self.model_flops and self.hlo_flops:
+            self.useful_ratio = self.model_flops / (self.hlo_flops * self.chips)
+        return self
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound (fully-overlapped): max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-resource roofline the useful work
+        achieves: useful_compute_time / step_time."""
+        if not self.chips:
+            return 0.0
+        useful_s = (self.model_flops / self.chips) / TPU_V5E.peak_flops
+        return useful_s / max(self.step_time_s, 1e-12)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["step_time_s"] = self.step_time_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def analyze(hlo_text: str, cost: dict, *, arch: str, shape: str,
+            mesh_shape: tuple[int, ...], model_flops: float,
+            bytes_per_device: float = 0.0,
+            hw: Hardware = TPU_V5E, note: str = "") -> RooflineReport:
+    """Roofline from the compiled HLO text.
+
+    Uses the hloparse module parser (trip-count-aware: XLA's own
+    cost_analysis counts while bodies ONCE, under-counting scanned layer
+    stacks L×) — ``cost`` (compiled.cost_analysis()) is kept as a
+    cross-check field only."""
+    from repro.core.perfmodel import hloparse
+    chips = 1
+    for s in mesh_shape:
+        chips *= s
+    n_pods = mesh_shape[0] if len(mesh_shape) == 3 else 1
+    pod_stride = chips // n_pods
+    mc = hloparse.analyze_hlo(hlo_text, pod_stride=pod_stride,
+                              n_pods=n_pods)
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=tuple(mesh_shape), chips=chips,
+        hlo_flops=mc.flops,
+        hlo_bytes=mc.traffic_bytes,
+        ici_bytes=mc.collective_bytes_intra,
+        dcn_bytes=mc.collective_bytes_cross,
+        collective_count={k: int(v) for k, v in
+                          mc.collective_count.items()},
+        model_flops=model_flops, bytes_per_device=bytes_per_device,
+        note=note)
+    rep.xla_cost_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    return rep.finalize(hw)

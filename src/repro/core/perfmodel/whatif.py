@@ -1,0 +1,120 @@
+"""What-if analysis (paper §4.2–4.3 + Appendix D) — the paper's tool.
+
+Each function reproduces one simulated figure and returns a plain table
+(list of dicts) so benchmarks/tests/CLI can consume it uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+from repro.core.perfmodel import calibration as cal
+from repro.core.perfmodel import model as pm
+from repro.core.perfmodel.hardware import Hardware
+
+
+def bandwidth_sweep(w: pm.Workload, p: int, hw: Hardware,
+                    spec: pm.CompressionSpec,
+                    gbps: Sequence[float] = (1, 2, 4, 8, 10, 15, 20, 30),
+                    ) -> list[dict]:
+    """Figs 3/17: syncSGD vs compression across network bandwidth."""
+    rows = []
+    for g in gbps:
+        h = hw.with_net(g)
+        t_sync = pm.sync_sgd_time(w, p, h)
+        t_comp = pm.compressed_time(w, p, h, spec)
+        rows.append(dict(gbps=g, t_sync=t_sync, t_comp=t_comp,
+                         speedup=t_sync / t_comp))
+    return rows
+
+
+def batch_size_sweep(w: pm.Workload, p: int, hw: Hardware,
+                     spec_builder, batches: Sequence[int] = (16, 32, 64),
+                     ) -> list[dict]:
+    """Fig 8: large batches hide communication, shrinking compression's edge."""
+    rows = []
+    for b in batches:
+        wb = cal.batch_scaled(w, b)
+        spec = spec_builder(wb)
+        t_sync = pm.sync_sgd_time(wb, p, hw)
+        t_comp = pm.compressed_time(wb, p, hw, spec)
+        rows.append(dict(batch=b, t_sync=t_sync, t_comp=t_comp,
+                         speedup=t_sync / t_comp))
+    return rows
+
+
+def required_compression_sweep(w: pm.Workload, p: int, hw: Hardware,
+                               batches: Sequence[int] = (4, 8, 16, 32, 64),
+                               ) -> list[dict]:
+    """Figs 11/16: compression ratio needed for near-linear scaling."""
+    rows = []
+    for b in batches:
+        wb = cal.batch_scaled(w, b)
+        ratio = pm.required_compression(wb, p, hw)
+        rows.append(dict(batch=b, required_ratio=ratio))
+    return rows
+
+
+def compute_speedup_sweep(w: pm.Workload, p: int, hw: Hardware,
+                          spec: pm.CompressionSpec,
+                          speedups: Sequence[float] = (1, 1.5, 2, 2.5, 3, 3.5, 4),
+                          ) -> list[dict]:
+    """Fig 18: faster compute (encode-decode scales down too), fixed network."""
+    rows = []
+    for s in speedups:
+        ws = w.scaled_compute(s)
+        spec_s = dataclasses.replace(spec,
+                                     t_encode_decode=spec.t_encode_decode / s)
+        t_sync = pm.sync_sgd_time(ws, p, hw)
+        t_comp = pm.compressed_time(ws, p, hw, spec_s)
+        rows.append(dict(compute_speedup=s, t_sync=t_sync, t_comp=t_comp,
+                         speedup=t_sync / t_comp))
+    return rows
+
+
+def encode_tradeoff_sweep(w: pm.Workload, p: int, hw: Hardware,
+                          spec: pm.CompressionSpec,
+                          ks: Sequence[float] = (1, 2, 3, 4),
+                          ls: Sequence[int] = (1, 2, 3)) -> list[dict]:
+    """Fig 19: divide encode-decode by k while multiplying payload by k^l —
+    'any reduction in encode time helps, even at reduced compression'."""
+    rows = []
+    for l in ls:
+        for k in ks:
+            spec_kl = dataclasses.replace(
+                spec,
+                name=f"{spec.name}-k{k:g}l{l}",
+                t_encode_decode=spec.t_encode_decode / k,
+                payload_bytes=tuple(b * (k ** l) for b in spec.payload_bytes))
+            t = pm.compressed_time(w, p, hw, spec_kl)
+            rows.append(dict(k=k, l=l, t_comp=t,
+                             t_sync=pm.sync_sgd_time(w, p, hw)))
+    return rows
+
+
+def scaling_curve(w: pm.Workload, hw: Hardware, spec: pm.CompressionSpec | None,
+                  ps: Sequence[int] = (4, 8, 16, 32, 64, 96)) -> list[dict]:
+    """Figs 5/6/7: per-iteration time vs #GPUs."""
+    rows = []
+    for p in ps:
+        row = dict(p=p, t_linear=pm.linear_scaling_time(w),
+                   t_sync=pm.sync_sgd_time(w, p, hw))
+        if spec is not None:
+            row["t_comp"] = pm.compressed_time(w, p, hw, spec)
+        rows.append(row)
+    return rows
+
+
+def choose_policy(model_bytes: float, t_comp: float, p: int, hw: Hardware,
+                  candidate_specs: Iterable[pm.CompressionSpec]) -> str:
+    """The paper's contribution as a scheduling decision: given a link, pick
+    raw syncSGD or the best compression scheme.  Used by the launcher to
+    decide per-mesh-axis policy (DESIGN.md §4)."""
+    w = pm.Workload("query", model_bytes, t_comp)
+    best_name, best_t = "none", pm.sync_sgd_time(w, p, hw)
+    for spec in candidate_specs:
+        t = pm.compressed_time(w, p, hw, spec)
+        if t < best_t:
+            best_name, best_t = spec.name, t
+    return best_name

@@ -1,0 +1,81 @@
+"""Platform-dispatching jit'd wrappers for the Pallas kernels.
+
+On TPU, compute hot spots route to the Pallas implementations (explicit
+BlockSpec VMEM tiling); everywhere else (CPU tests, dry-run lowering on fake
+CPU devices) they route to the pure-jnp oracles in ``ref.py``.  Pass
+``force='pallas'``/``force='ref'`` (or set ``repro.kernels.ops.FORCE``) to pin
+a path — kernel tests use ``force='pallas'`` with interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref
+
+FORCE: str | None = None  # None | "ref" | "pallas"
+
+
+def _use_pallas(force: str | None) -> bool:
+    mode = force or FORCE
+    if mode == "ref":
+        return False
+    if mode == "pallas":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def powersgd_encode(m, q, *, force=None):
+    if _use_pallas(force):
+        from repro.kernels import powersgd as k
+        return k.encode(m, q, interpret=jax.default_backend() != "tpu")
+    return ref.powersgd_encode(m, q)
+
+
+def powersgd_decode(p, q, *, force=None):
+    if _use_pallas(force):
+        from repro.kernels import powersgd as k
+        return k.decode(p, q, interpret=jax.default_backend() != "tpu")
+    return ref.powersgd_decode(p, q)
+
+
+def pack_signs(g, *, force=None):
+    if _use_pallas(force):
+        from repro.kernels import bitpack as k
+        return k.pack_signs(g, interpret=jax.default_backend() != "tpu")
+    return ref.pack_signs(g)
+
+
+def popcount_votes(gathered, n, *, force=None):
+    if _use_pallas(force):
+        from repro.kernels import bitpack as k
+        return k.popcount_votes(gathered, n,
+                                interpret=jax.default_backend() != "tpu")
+    return ref.popcount_votes(gathered, n)
+
+
+def unpack_signs(packed, n, *, force=None):
+    return ref.unpack_signs(packed, n)
+
+
+def topk_select(g, k, *, force=None):
+    # Exact selection everywhere; the Pallas threshold+mask path is a
+    # separate op because its contract (approximate-k) differs.
+    return ref.topk_select(g, k)
+
+
+def topk_threshold_mask(g, threshold, *, force=None):
+    if _use_pallas(force):
+        from repro.kernels import topk as k
+        return k.threshold_mask(g, threshold,
+                                interpret=jax.default_backend() != "tpu")
+    return ref.topk_threshold_mask(g, threshold)
+
+
+def qsgd_quantize(g, norm, levels, key, *, force=None):
+    if _use_pallas(force):
+        from repro.kernels import qsgd as k
+        return k.quantize(g, norm, levels, key,
+                          interpret=jax.default_backend() != "tpu")
+    return ref.qsgd_quantize(g, norm, levels, key)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernels for the PowerSGD encode/decode matmuls — the paper's
+T_encode-decode hot spot (Table 2), adapted to the TPU memory hierarchy:
+
+  encode  P = M @ Q   (rows × cols) @ (cols × r), r ≪ cols (tall-skinny)
+  decode  M̂ = P @ Qᵀ  (rows × r) @ (r × cols)
+
+Tiling (DESIGN.md §2): M streams through VMEM in (bm × bk) blocks over a
+(rows/bm, cols/bk) grid; the skinny factor stays VMEM-resident per grid
+column; fp32 accumulation in the output block.  The rank dim rides the MXU
+lane axis (hardware pads to 128 lanes — rank ≤ 16 wastes lanes but the op
+is HBM-bandwidth-bound on M, so the stream rate, not lane fill, is the
+roofline).  Block shapes keep the working set ≤ ~6 MB of the 128 MB VMEM
+and the streaming dims multiples of (8, 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# --------------------------------------------------------------------------
+# encode: P = M @ Q
+# --------------------------------------------------------------------------
+def _encode_kernel(m_ref, q_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(m_ref[...].astype(jnp.float32),
+                          q_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+
+def encode(m: jax.Array, q: jax.Array, *, bm: int = 256, bk: int = 512,
+           interpret: bool = False) -> jax.Array:
+    """P = M @ Q.  m: (rows, cols); q: (cols, r) -> (rows, r) fp32."""
+    rows, cols = m.shape
+    r = q.shape[1]
+    bm = min(bm, _ceil_to(rows, 8))
+    bk = min(bk, _ceil_to(cols, 128))
+    pr, pk = _ceil_to(rows, bm), _ceil_to(cols, bk)
+    if (pr, pk) != (rows, cols):
+        m = jnp.pad(m, ((0, pr - rows), (0, pk - cols)))
+    if pk != cols:
+        q = jnp.pad(q, ((0, pk - cols), (0, 0)))
+    grid = (pr // bm, pk // bk)
+    out = pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+                  pl.BlockSpec((bk, r), lambda i, k: (k, 0))],
+        out_specs=pl.BlockSpec((bm, r), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pr, r), jnp.float32),
+        interpret=interpret,
+    )(m, q)
+    return out[:rows]
+
+
+# --------------------------------------------------------------------------
+# decode: M̂ = P @ Qᵀ
+# --------------------------------------------------------------------------
+def _decode_kernel(p_ref, q_ref, o_ref):
+    o_ref[...] = jnp.dot(p_ref[...].astype(jnp.float32),
+                         q_ref[...].astype(jnp.float32).T,
+                         preferred_element_type=jnp.float32)
+
+
+def decode(p: jax.Array, q: jax.Array, *, bm: int = 256, bn: int = 512,
+           interpret: bool = False) -> jax.Array:
+    """M̂ = P @ Qᵀ.  p: (rows, r); q: (cols, r) -> (rows, cols) fp32."""
+    rows, r = p.shape
+    cols = q.shape[0]
+    bm = min(bm, _ceil_to(rows, 8))
+    bn = min(bn, _ceil_to(cols, 128))
+    pr, pn = _ceil_to(rows, bm), _ceil_to(cols, bn)
+    if pr != rows:
+        p = jnp.pad(p, ((0, pr - rows), (0, 0)))
+    if pn != cols:
+        q = jnp.pad(q, ((0, pn - cols), (0, 0)))
+    grid = (pr // bm, pn // bn)
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, r), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pr, pn), jnp.float32),
+        interpret=interpret,
+    )(p, q)
+    return out[:rows, :cols]

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel for QSGD stochastic uniform quantization.
+
+The rounding randomness is hoisted OUTSIDE the kernel (uniform u ~ U[0,1)
+generated with the caller's jax.random key) so the kernel is bit-exact with
+the pure-jnp oracle: ``jax.random.bernoulli(key, p) == uniform(key) < p``.
+On real TPU the u-stream could instead come from pltpu PRNG primitives in
+VMEM; the memory-bound streaming structure is identical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _quant_kernel(g_ref, u_ref, s_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    inv_norm_levels = s_ref[0]
+    scaled = jnp.abs(g) * inv_norm_levels              # in [0, levels]
+    low = jnp.floor(scaled)
+    up = (u < (scaled - low)).astype(jnp.float32)
+    mag = low + up
+    o_ref[...] = (jnp.sign(g) * mag).astype(jnp.int8)
+
+
+def quantize(g: jax.Array, norm: jax.Array, levels: int, key: jax.Array,
+             *, bk: int = 65536, interpret: bool = False) -> jax.Array:
+    """Stochastic quantize to signed int levels in [-levels, levels]."""
+    n = g.shape[0]
+    u = jax.random.uniform(key, (n,), jnp.float32)
+    pn = _ceil_to(n, bk) if n > bk else n
+    bk = min(bk, pn)
+    if pn != n:
+        g = jnp.pad(g, (0, pn - n))
+        u = jnp.pad(u, (0, pn - n))
+    s = (jnp.float32(levels) / (norm + 1e-12)).reshape(1)
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=(pn // bk,),
+        in_specs=[pl.BlockSpec((bk,), lambda i: (i,)),
+                  pl.BlockSpec((bk,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pn,), jnp.int8),
+        interpret=interpret,
+    )(g, u, s)
+    return out[:n]

@@ -1,0 +1,44 @@
+"""Pallas TPU kernel for MSTop-K's threshold masking.
+
+TPU adaptation of the paper's Top-K (DESIGN.md §2): data-dependent
+compaction doesn't vectorize on TPU, so selection is a sampled-quantile
+threshold estimate (ref.sampled_threshold, host of the multi-stage trick)
+followed by this dense ``|g| >= t ? g : 0`` masking kernel — a pure VPU
+streaming op whose roofline is HBM bandwidth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _mask_kernel(g_ref, t_ref, o_ref):
+    g = g_ref[...]
+    t = t_ref[0]
+    o_ref[...] = jnp.where(jnp.abs(g) >= t, g, jnp.zeros_like(g))
+
+
+def threshold_mask(g: jax.Array, threshold: jax.Array, *, bk: int = 65536,
+                   interpret: bool = False) -> jax.Array:
+    """g: (n,); threshold: scalar -> masked g (same shape/dtype)."""
+    n = g.shape[0]
+    pn = _ceil_to(n, bk) if n > bk else n
+    bk = min(bk, pn)
+    if pn != n:
+        g = jnp.pad(g, (0, pn - n))
+    t = jnp.asarray(threshold, g.dtype).reshape(1)
+    out = pl.pallas_call(
+        _mask_kernel,
+        grid=(pn // bk,),
+        in_specs=[pl.BlockSpec((bk,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pn,), g.dtype),
+        interpret=interpret,
+    )(g, t)
+    return out[:n]

@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every model input (MULTI-POD DRY-RUN
+step 2): weak-type-correct, shardable, no device allocation.
+
+``input_specs(arch, shape, dp_axes)`` returns (sds_dict, spec_dict) for the
+train/prefill batch; ``decode_inputs`` the single-token decode batch.
+Modality frontends are STUBS per the assignment: [vlm]/[audio] get
+precomputed patch/frame embeddings here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(arch: ArchConfig, shape: ShapeConfig,
+                 dp_axes: tuple[str, ...]):
+    gb, s = shape.global_batch, shape.seq_len
+    dp = tuple(dp_axes) or None
+    sds: dict = {}
+    specs: dict = {}
+    if arch.family == "vlm":
+        sds["embeds"] = _sds((gb, s, arch.d_model), jnp.bfloat16)
+        specs["embeds"] = P(dp, None, None)
+        sds["mrope_positions"] = _sds((3, gb, s), jnp.int32)
+        specs["mrope_positions"] = P(None, dp, None)
+    elif arch.family == "audio":
+        sds["enc_embeds"] = _sds((gb, s, arch.d_model), jnp.bfloat16)
+        specs["enc_embeds"] = P(dp, None, None)
+        sds["tokens"] = _sds((gb, s), jnp.int32)
+        specs["tokens"] = P(dp, None)
+    else:
+        sds["tokens"] = _sds((gb, s), jnp.int32)
+        specs["tokens"] = P(dp, None)
+    sds["labels"] = _sds((gb, s), jnp.int32)
+    specs["labels"] = P(dp, None)
+    return sds, specs
+
+
+def prefill_inputs(arch: ArchConfig, shape: ShapeConfig,
+                   dp_axes: tuple[str, ...], context_parallel: bool):
+    sds, specs = train_inputs(arch, shape, dp_axes)
+    del sds["labels"], specs["labels"]
+    if context_parallel:  # batch too small to shard: replicate inputs
+        specs = {k: P(*([None] * sds[k].ndim)) for k in sds}
+    return sds, specs
+
+
+def decode_inputs(arch: ArchConfig, shape: ShapeConfig,
+                  dp_axes: tuple[str, ...], context_parallel: bool):
+    gb = shape.global_batch
+    bdp = None if context_parallel else (tuple(dp_axes) or None)
+    sds = {"tokens": _sds((gb, 1), jnp.int32),
+           "cur_len": _sds((gb,), jnp.int32)}
+    specs = {"tokens": P(bdp, None), "cur_len": P(bdp)}
+    if arch.family == "vlm":
+        sds["mrope_positions"] = _sds((3, gb, 1), jnp.int32)
+        specs["mrope_positions"] = P(None, bdp, None)
+    return sds, specs

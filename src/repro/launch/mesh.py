@@ -1,0 +1,36 @@
+"""Production mesh construction (MULTI-POD DRY-RUN step 1).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.  The production target is TPU v5e:
+16×16 = 256 chips per pod; the multi-pod mesh adds a leading "pod" axis
+(2 pods = 512 chips) whose links are DCN, not ICI — the axis the paper's
+compression targets (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except TypeError:  # older jax without axis_types
+        return jax.make_mesh(shape, axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small fake-device mesh for CPU distributed tests."""
+    return _mk(shape, axes)
+
+
+def make_local_mesh():
+    """Single-device mesh (CPU examples)."""
+    return _mk((1, 1), ("data", "model"))

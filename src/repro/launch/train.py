@@ -1,0 +1,89 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+CPU-scale entry point (reduced configs by default) exercising the REAL
+production path: mesh -> TrainSetup -> sharded state -> Trainer with
+checkpointing, preemption handling and optional local-SGD.  On a real TPU
+fleet the same module runs with --mesh single/multi and full configs.
+"""
+import argparse
+import os
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced smoke size)")
+    ap.add_argument("--mesh", default="local",
+                    choices=["local", "test", "single", "multi"])
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake-device count for --mesh test")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--compression", default=None,
+                    help="none|powersgd|signsgd|mstopk|randomk|qsgd|terngrad")
+    ap.add_argument("--compress-axes", default=None, choices=["pod", "all"])
+    ap.add_argument("--sync-every", type=int, default=1)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.mesh == "test" and args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import base as cfgs
+    from repro.data.pipeline import Pipeline
+    from repro.data.synthetic import DataConfig
+    from repro.launch import mesh as mesh_mod
+    from repro.train import train_step as ts
+    from repro.train.schedule import ScheduleConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    arch = cfgs.get(args.arch)
+    if not args.full_size:
+        arch = cfgs.reduced(arch)
+    if args.mesh == "local":
+        mesh = mesh_mod.make_local_mesh()
+    elif args.mesh == "test":
+        n = len(jax.devices())
+        assert n >= 8, "use --devices 8 (or more) with --mesh test"
+        mesh = mesh_mod.make_test_mesh((2, n // 4, 2))
+    else:
+        mesh = mesh_mod.make_production_mesh(
+            multi_pod=(args.mesh == "multi"))
+
+    overrides = {}
+    if args.compression:
+        overrides["compression"] = args.compression
+    if args.compress_axes:
+        overrides["compress_axes"] = args.compress_axes
+    setup = ts.build(arch, mesh, **overrides)
+    print(f"[train] arch={arch.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"dp_mode={arch.plan.dp_mode} fsdp={setup.fsdp_axes} "
+          f"agg={setup.agg_cfg.compressor}@{setup.agg_cfg.compress_axes}")
+
+    data = Pipeline(DataConfig(vocab=arch.vocab, seq_len=args.seq,
+                               global_batch=args.batch, seed=args.seed))
+    tcfg = TrainerConfig(
+        total_steps=args.steps, log_every=args.log_every,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        sync_every=args.sync_every, accum=args.accum,
+        schedule=ScheduleConfig(peak_lr=args.lr, warmup_steps=args.warmup,
+                                total_steps=args.steps))
+    trainer = Trainer(setup, tcfg, data)
+    state = trainer.run(jax.random.key(args.seed))
+    print(f"[train] done at step {int(jax.device_get(state['step']))}")
+
+
+if __name__ == "__main__":
+    main()

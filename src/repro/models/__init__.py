@@ -1,0 +1,3 @@
+from repro.models import registry  # noqa: F401
+from repro.models.layers import CPU_CTX, ShardCtx  # noqa: F401
+from repro.models.model import Model, build, globalize  # noqa: F401

@@ -1,0 +1,133 @@
+"""Encoder–decoder backbone (seamless-m4t-medium).
+
+Backbone-only per the assignment: the speech frontend is a STUB —
+``input_specs()`` supplies precomputed (B, S_enc, d) frame embeddings.  The
+encoder is a bidirectional transformer stack; the decoder adds cross
+attention over the encoder memory.  Decode-time cross K/V are computed once
+at prefill and carried in the cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_ops
+from repro.models.layers import (ShardCtx, head_layout, local_head_mask,
+                                 rmsnorm, rmsnorm_init, row_linear,
+                                 tp_copy, tp_reduce)
+from repro.models.transformer import (Aux, StepState, attn_apply,
+                                      attn_cache_shape, attn_init, mlp_apply,
+                                      mlp_init, _project_qkv)
+
+
+# --------------------------------------------------------------------------
+# Cross attention
+# --------------------------------------------------------------------------
+def cross_attn_init(key, cfg, ctx: ShardCtx):
+    # reuse attn_init weights; wq/wo consume decoder states, wk/wv the memory
+    return attn_init(key, cfg, ctx)
+
+
+def cross_kv(params, memory, cfg, ctx: ShardCtx):
+    """memory: (B, S_enc, d) -> cross k/v (B, S_enc, kv_local, hd)."""
+    lay = head_layout(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, ctx.tp)
+    _, k, v = _project_qkv(params, memory, cfg, ctx, lay)
+    return k, v
+
+
+def cross_attn_apply(params, x, memory_kv, ctx: ShardCtx, cfg,
+                     enc_len: Optional[jax.Array] = None):
+    """x: (B, Sq[, /tp], d); memory_kv: (k, v) each (B, S_enc, kv, hd)."""
+    from repro.models.layers import column_linear
+    lay = head_layout(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, ctx.tp)
+    h = tp_copy(x, ctx)
+    b, s, _ = h.shape
+    q = column_linear(params["wq"], h, ctx).reshape(b, s, lay.L,
+                                                    lay.head_dim)
+    k, v = memory_kv
+    s_enc = k.shape[1]
+    if s == 1:
+        cur = enc_len if enc_len is not None \
+            else jnp.full((b,), s_enc, jnp.int32)
+        out = attn_ops.decode_attention(q, k, v, cur)
+    else:
+        qpos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        kpos = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+        out = attn_ops.chunked_attention(q, k, v, causal=False,
+                                         q_positions=qpos, k_positions=kpos)
+    mask = local_head_mask(lay)
+    out = out * mask[None, None, :, None].astype(out.dtype)
+    out = out.reshape(b, s, lay.L * lay.head_dim)
+    out = row_linear(params["wo"], out, ctx)
+    return tp_reduce(out, ctx)
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+def enc_block_init(key, cfg, ctx: ShardCtx):
+    ks = jax.random.split(key, 4)
+    pa, sa = attn_init(ks[0], cfg, ctx)
+    pm, sm = mlp_init(ks[1], cfg.d_model, cfg.d_ff, ctx, kind="gelu")
+    pn1, sn1 = rmsnorm_init(cfg.d_model, ctx)
+    pn2, sn2 = rmsnorm_init(cfg.d_model, ctx)
+    return ({"attn": pa, "mlp": pm, "ln1": pn1, "ln2": pn2},
+            {"attn": sa, "mlp": sm, "ln1": sn1, "ln2": sn2})
+
+
+def enc_block_apply(params, x, aux: Aux, ctx: ShardCtx, cfg):
+    st = StepState(mode="train")
+    a, _ = attn_apply(params["attn"], rmsnorm(params["ln1"], x, cfg.norm_eps),
+                      aux, ctx, cfg, st, None, causal=False)
+    x = x + a
+    x = x + mlp_apply(params["mlp"], rmsnorm(params["ln2"], x, cfg.norm_eps),
+                      ctx, kind="gelu")
+    return x
+
+
+def dec_block_init(key, cfg, ctx: ShardCtx):
+    ks = jax.random.split(key, 6)
+    pa, sa = attn_init(ks[0], cfg, ctx)
+    pc, sc = cross_attn_init(ks[1], cfg, ctx)
+    pm, sm = mlp_init(ks[2], cfg.d_model, cfg.d_ff, ctx, kind="gelu")
+    norms, nspecs = {}, {}
+    for name in ("ln1", "ln2", "ln3"):
+        norms[name], nspecs[name] = rmsnorm_init(cfg.d_model, ctx)
+    return ({"self": pa, "cross": pc, "mlp": pm, **norms},
+            {"self": sa, "cross": sc, "mlp": sm, **nspecs})
+
+
+def dec_block_apply(params, x, aux: Aux, ctx: ShardCtx, cfg, st: StepState,
+                    cache, memory=None):
+    """cache: {"self": kv-cache, "cross": (k, v)} (cross built at prefill
+    from ``memory``; in train mode cross k/v are computed on the fly)."""
+    a, self_cache = attn_apply(
+        params["self"], rmsnorm(params["ln1"], x, cfg.norm_eps),
+        aux, ctx, cfg, st, None if st.training else cache["self"])
+    x = x + a
+    if st.training or st.mode == "prefill":
+        mkv = cross_kv(params["cross"], memory, cfg, ctx)
+    else:
+        mkv = cache["cross"]
+    c = cross_attn_apply(params["cross"],
+                         rmsnorm(params["ln2"], x, cfg.norm_eps),
+                         mkv, ctx, cfg)
+    x = x + c
+    x = x + mlp_apply(params["mlp"], rmsnorm(params["ln3"], x, cfg.norm_eps),
+                      ctx, kind="gelu")
+    new_cache = None
+    if not st.training:
+        new_cache = {"self": self_cache, "cross": mkv}
+    return x, new_cache
+
+
+def dec_cache_shape(cfg, ctx: ShardCtx, batch_local: int,
+                    cache_len_local: int, enc_len: int):
+    lay = head_layout(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, ctx.tp)
+    kv = jax.ShapeDtypeStruct(
+        (batch_local, enc_len, lay.kv_local, lay.head_dim), jnp.bfloat16)
+    return {"self": attn_cache_shape(cfg, ctx, batch_local, cache_len_local),
+            "cross": (kv, kv)}

@@ -1,0 +1,473 @@
+"""Sharded primitive layers (manual TP inside shard_map).
+
+Conventions (DESIGN.md §4):
+  * TP axis = "model" (size `ctx.tp`); DP axes = ctx.dp_axes.
+  * Activations between blocks are replicated over TP — or sharded over the
+    sequence dim when ctx.seq_parallel (Megatron-SP).
+  * Megatron f/g conjugate pairs make manual-TP autodiff exact:
+      - `tp_copy`   enters the TP region (identity fwd / psum bwd; with SP:
+        seq all-gather fwd / seq reduce-scatter bwd)
+      - `tp_reduce` exits it (psum fwd / identity bwd; with SP: seq
+        reduce-scatter fwd / seq all-gather bwd)
+      - `tp_shared` wraps weights that are replicated over TP but consumed
+        inside the region (GQA KV projections when kv_heads < tp, xLSTM
+        recurrent weights): identity fwd / grad psum over TP bwd.
+  * FSDP (HSDP): weights additionally sharded over ctx.fsdp_axes on their
+    non-TP dim; gathered at use (`fsdp_gather`), whose AD transpose IS the
+    ZeRO-3 gradient reduce-scatter.
+
+Every param-creating helper returns ``(params, specs)`` with matching
+pytrees; specs are `PartitionSpec`s for the GLOBAL (logical, padded) arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+TP_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    tp: int = 1
+    dp_axes: tuple[str, ...] = ()          # all DP axes (grad aggregation)
+    fsdp_axes: tuple[str, ...] = ()        # param-sharding subset (HSDP)
+    seq_parallel: bool = False
+    # decode-time context parallelism: mesh axes the KV cache is sharded over
+    # along its sequence dim (long_500k)
+    cache_seq_axes: tuple[str, ...] = ()
+    # MoE expert-parallel axis override: None = EP over the TP "model" axis
+    # (training default); "data" = 2D serving layout (E over data, d_ff over
+    # model) — how arctic's 936 GB of bf16 experts reside without gathers
+    moe_ep_axis: "str | None" = None
+    # beyond-paper: int8-quantize the FSDP param all-gather ("int8"|None)
+    gather_quant: "str | None" = None
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def fsdp(self) -> int:
+        return len(self.fsdp_axes) > 0
+
+    def fsdp_spec(self):
+        """Spec entry for the dim FSDP shards (None when not sharding)."""
+        return tuple(self.fsdp_axes) if self.fsdp_axes else None
+
+
+CPU_CTX = ShardCtx()   # single-device tests: tp=1, no sharding
+
+
+# --------------------------------------------------------------------------
+# Megatron f/g conjugate pairs
+# --------------------------------------------------------------------------
+def _mk_tp_copy(seq_parallel: bool, seq_axis: int):
+    @jax.custom_vjp
+    def f(x):
+        if seq_parallel:
+            return jax.lax.all_gather(x, TP_AXIS, axis=seq_axis, tiled=True)
+        return x
+
+    def fwd(x):
+        return f(x), None
+
+    def bwd(_, g):
+        if seq_parallel:
+            return (jax.lax.psum_scatter(g, TP_AXIS,
+                                         scatter_dimension=seq_axis,
+                                         tiled=True),)
+        return (jax.lax.psum(g, TP_AXIS),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _mk_tp_reduce(seq_parallel: bool, seq_axis: int):
+    @jax.custom_vjp
+    def f(x):
+        if seq_parallel:
+            return jax.lax.psum_scatter(x, TP_AXIS,
+                                        scatter_dimension=seq_axis,
+                                        tiled=True)
+        return jax.lax.psum(x, TP_AXIS)
+
+    def fwd(x):
+        return f(x), None
+
+    def bwd(_, g):
+        if seq_parallel:
+            return (jax.lax.all_gather(g, TP_AXIS, axis=seq_axis,
+                                       tiled=True),)
+        return (g,)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@jax.custom_vjp
+def tp_shared(w):
+    return w
+
+
+def _tps_fwd(w):
+    return w, None
+
+
+def _tps_bwd(_, g):
+    return (jax.lax.psum(g, TP_AXIS),)
+
+
+tp_shared.defvjp(_tps_fwd, _tps_bwd)
+
+
+def tp_copy(x, ctx: ShardCtx, seq_axis: int = 1):
+    if ctx.tp == 1:
+        return x
+    return _mk_tp_copy(ctx.seq_parallel, seq_axis)(x)
+
+
+def tp_reduce(x, ctx: ShardCtx, seq_axis: int = 1):
+    if ctx.tp == 1:
+        return x
+    return _mk_tp_reduce(ctx.seq_parallel, seq_axis)(x)
+
+
+def maybe_tp_shared(w, ctx: ShardCtx):
+    return tp_shared(w) if ctx.tp > 1 else w
+
+
+def tp_shared_tree(params, ctx: ShardCtx):
+    """maybe_tp_shared over every leaf (replicated params consumed by
+    per-device-distinct computations, e.g. per-head norm scales)."""
+    if ctx.tp <= 1:
+        return params
+    return jax.tree.map(tp_shared, params)
+
+
+def fsdp_gather(w, ctx: ShardCtx, axis: int = 0):
+    if not ctx.fsdp_axes:
+        return w
+    if ctx.gather_quant == "int8" and w.ndim >= 2 and \
+            w.dtype in (jnp.bfloat16, jnp.float32):
+        return _quantized_gather(w, tuple(ctx.fsdp_axes), axis)
+    return jax.lax.all_gather(w, ctx.fsdp_axes, axis=axis, tiled=True)
+
+
+def _mk_quantized_gather(axes: tuple, axis: int):
+    """int8 parameter all-gather (beyond-paper §Perf lever): the paper's
+    communication-compression insight applied to the ZeRO-3 PARAM path —
+    each shard is symmetric-int8 quantized with a per-shard scale before
+    the gather (~2x fewer ICI/DCN bytes than bf16), dequantized locally.
+
+    Backward stays exact: the VJP is the plain reduce-scatter of the
+    cotangent (quantized weights perturb the forward like weight noise;
+    gradients w.r.t. the STORED master weights keep full precision)."""
+    @jax.custom_vjp
+    def f(w):
+        dt = w.dtype
+        scale = jnp.max(jnp.abs(w.astype(jnp.float32))) / 127.0 + 1e-30
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        qg = jax.lax.all_gather(q, axes, axis=0, tiled=False)
+        sg = jax.lax.all_gather(scale, axes, axis=0, tiled=False)
+        # (p, *w.shape) int8 x (p,) scales -> dequant -> tile along `axis`
+        deq = qg.astype(jnp.float32) * sg.reshape((-1,) + (1,) * w.ndim)
+        parts = [deq[i] for i in range(deq.shape[0])]
+        return jnp.concatenate(parts, axis=axis).astype(dt)
+
+    def fwd(w):
+        return f(w), None
+
+    def bwd(_, g):
+        return (jax.lax.psum_scatter(g, axes, scatter_dimension=axis,
+                                     tiled=True),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _quantized_gather(w, axes, axis: int):
+    return _mk_quantized_gather(axes, axis)(w)
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+def _trunc_normal(key, shape, std, dtype):
+    return std * jax.random.truncated_normal(key, -3.0, 3.0, shape,
+                                             jnp.float32).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Linears
+# --------------------------------------------------------------------------
+def column_linear_init(key, d_in: int, d_out: int, ctx: ShardCtx,
+                       std: float | None = None):
+    """Weight (d_in, d_out), output dim sharded over TP."""
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    w = _trunc_normal(key, (d_in, d_out), std, ctx.param_dtype)
+    return {"w": w}, {"w": P(ctx.fsdp_spec(), TP_AXIS)}
+
+
+def column_linear(params, x, ctx: ShardCtx):
+    """x: (..., d_in) replicated over TP -> (..., d_out/tp).  Params cast to
+    the compute dtype BEFORE the FSDP gather (bf16 gather: half the
+    collective bytes and half the transient footprint)."""
+    w = fsdp_gather(params["w"].astype(ctx.compute_dtype), ctx, axis=0)
+    return x @ w
+
+
+def row_linear_init(key, d_in: int, d_out: int, ctx: ShardCtx,
+                    std: float | None = None):
+    """Weight (d_in, d_out), INPUT dim sharded over TP."""
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    w = _trunc_normal(key, (d_in, d_out), std, ctx.param_dtype)
+    return {"w": w}, {"w": P(TP_AXIS, ctx.fsdp_spec())}
+
+
+def row_linear(params, x, ctx: ShardCtx):
+    """x: (..., d_in/tp) -> partial (..., d_out); caller applies tp_reduce."""
+    w = fsdp_gather(params["w"].astype(ctx.compute_dtype), ctx, axis=1)
+    return x @ w
+
+
+def replicated_linear_init(key, d_in: int, d_out: int, ctx: ShardCtx,
+                           std: float | None = None):
+    """TP-replicated weight (consumed inside the TP region via tp_shared)."""
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    w = _trunc_normal(key, (d_in, d_out), std, ctx.param_dtype)
+    return {"w": w}, {"w": P(ctx.fsdp_spec(), None)}
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm_init(d: int, ctx: ShardCtx):
+    return ({"scale": jnp.ones((d,), ctx.param_dtype)}, {"scale": P(None)})
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, ctx: ShardCtx):
+    return ({"scale": jnp.ones((d,), ctx.param_dtype),
+             "bias": jnp.zeros((d,), ctx.param_dtype)},
+            {"scale": P(None), "bias": P(None)})
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                   # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """qwen2-vl ratio (16, 24, 24)/64 of the half-spectrum, scaled to
+    head_dim (temporal / height / width)."""
+    half = head_dim // 2
+    hw = 3 * half // 8
+    return (half - 2 * hw, hw, hw)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, ...] | None = None):
+    """M-RoPE: positions (3, B, S) — t/h/w ids each rotate its own slice of
+    the frequency spectrum (Qwen2-VL §3.1)."""
+    half = x.shape[-1] // 2
+    if sections is None:
+        sections = mrope_sections(x.shape[-1])
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                   # (half,)
+    # angle per frequency chooses its section's position stream
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=half)
+    pos = jnp.take(positions, sec_id, axis=0)                # (half, B, S)
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# GQA head layout (DESIGN.md §5)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HeadLayout:
+    n_heads: int          # logical q heads
+    kv_heads: int         # logical kv heads
+    head_dim: int
+    tp: int
+    L: int                # q heads per device (padded layout)
+    g: int                # logical q-heads per kv group
+    g_pad: int            # padded group size
+    n_h_pad: int          # padded total q heads
+    kv_local: int         # kv heads held per device
+    kv_replicated: bool   # kv weights TP-replicated + sliced (kv < tp)
+
+    @property
+    def padded(self) -> bool:
+        return self.n_h_pad != self.n_heads
+
+
+def head_layout(n_heads: int, kv_heads: int, head_dim: int,
+                tp: int) -> HeadLayout:
+    assert n_heads % kv_heads == 0, (n_heads, kv_heads)
+    g = n_heads // kv_heads
+    if kv_heads >= tp:
+        assert kv_heads % tp == 0 and n_heads % tp == 0
+        return HeadLayout(n_heads, kv_heads, head_dim, tp,
+                          L=n_heads // tp, g=g, g_pad=g, n_h_pad=n_heads,
+                          kv_local=kv_heads // tp, kv_replicated=False)
+    assert tp % kv_heads == 0, (tp, kv_heads)
+    r = tp // kv_heads
+    L = -(-n_heads // tp)
+    g_pad = L * (-(-g // L))
+    assert g_pad // L == r, (
+        f"unsupported GQA layout n={n_heads} kv={kv_heads} tp={tp}")
+    return HeadLayout(n_heads, kv_heads, head_dim, tp,
+                      L=L, g=g, g_pad=g_pad, n_h_pad=g_pad * kv_heads,
+                      kv_local=1, kv_replicated=True)
+
+
+def pad_q_columns(w: jax.Array, lay: HeadLayout) -> jax.Array:
+    """Scatter logical q-head columns (d, n·hd) into padded per-group layout
+    (d, n_h_pad·hd)."""
+    if not lay.padded:
+        return w
+    d = w.shape[0]
+    w = w.reshape(d, lay.kv_heads, lay.g, lay.head_dim)
+    w = jnp.pad(w, ((0, 0), (0, 0), (0, lay.g_pad - lay.g), (0, 0)))
+    return w.reshape(d, lay.n_h_pad * lay.head_dim)
+
+
+def local_head_mask(lay: HeadLayout) -> jax.Array:
+    """(L,) bool — which of this device's padded q heads are real."""
+    if not lay.padded:
+        return jnp.ones((lay.L,), bool)
+    m = jax.lax.axis_index(TP_AXIS) if lay.tp > 1 else 0
+    idx = m * lay.L + jnp.arange(lay.L)
+    return (idx % lay.g_pad) < lay.g
+
+
+def local_kv_slice(kv: jax.Array, lay: HeadLayout) -> jax.Array:
+    """kv: (B, S, kv_heads, hd) full (replicated case) -> local head(s)."""
+    if not lay.kv_replicated:
+        return kv
+    m = jax.lax.axis_index(TP_AXIS) if lay.tp > 1 else 0
+    r = lay.tp // lay.kv_heads
+    head = m // r if lay.tp > 1 else 0
+    return jax.lax.dynamic_slice_in_dim(kv, head, 1, axis=2)
+
+
+# --------------------------------------------------------------------------
+# Vocab-parallel embedding + cross-entropy
+# --------------------------------------------------------------------------
+def pad_vocab(vocab: int, tp: int) -> int:
+    return -(-vocab // tp) * tp
+
+
+def embedding_init(key, vocab: int, d: int, ctx: ShardCtx,
+                   std: float = 0.02):
+    v_pad = pad_vocab(vocab, ctx.tp)
+    table = _trunc_normal(key, (v_pad, d), std, ctx.param_dtype)
+    return {"table": table}, {"table": P(TP_AXIS, ctx.fsdp_spec())}
+
+
+def embedding_lookup(params, ids: jax.Array, ctx: ShardCtx,
+                     vocab: int, seq_axis: int = 1):
+    """ids: (B, S) full-seq, replicated over TP -> (B, S, d); with SP the
+    result is seq-sharded (B, S/tp, d) via psum_scatter (the vocab-parallel
+    partial sums double as the SP entry reduce-scatter)."""
+    table = fsdp_gather(params["table"].astype(ctx.compute_dtype), ctx,
+                        axis=1)
+    if ctx.tp == 1:
+        return jnp.take(table, jnp.minimum(ids, vocab - 1), axis=0)
+    shard = table.shape[0]
+    off = jax.lax.axis_index(TP_AXIS) * shard
+    local = ids - off
+    ok = (local >= 0) & (local < shard)
+    emb = jnp.take(table, jnp.clip(local, 0, shard - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, 0)
+    if ctx.seq_parallel:
+        return jax.lax.psum_scatter(emb, TP_AXIS, scatter_dimension=seq_axis,
+                                    tiled=True)
+    return jax.lax.psum(emb, TP_AXIS)
+
+
+def unembed_logits(params, x: jax.Array, ctx: ShardCtx):
+    """x: (B, S, d) -> local logits (B, S, V/tp) (vocab-parallel)."""
+    table = fsdp_gather(params["table"].astype(ctx.compute_dtype), ctx,
+                        axis=1)
+    return x @ table.T
+
+
+def vocab_parallel_xent(local_logits: jax.Array, labels: jax.Array,
+                        ctx: ShardCtx, vocab: int):
+    """Cross-entropy over vocab-parallel logits.
+
+    local_logits: (B, S, V/tp); labels: (B, S) global ids.
+    Returns per-token loss (B, S) in fp32.  Stable: global max + lse via TP
+    collectives.  Padded vocab rows never win (labels < vocab)."""
+    ll = local_logits.astype(jnp.float32)
+    if ctx.tp == 1:
+        lse = jax.nn.logsumexp(ll, axis=-1)
+        gold = jnp.take_along_axis(ll, labels[..., None], axis=-1)[..., 0]
+        return lse - gold
+    shard = ll.shape[-1]
+    off = jax.lax.axis_index(TP_AXIS) * shard
+    # stabilizer only — constant wrt grads; pmax has no JVP rule, so gather
+    # the per-shard maxima (all_gather is differentiable) and reduce locally
+    m = jax.lax.stop_gradient(jnp.max(
+        jax.lax.all_gather(jnp.max(ll, axis=-1), TP_AXIS), axis=0))
+    sumexp = jax.lax.psum(jnp.sum(jnp.exp(ll - m[..., None]), -1), TP_AXIS)
+    lse = m + jnp.log(sumexp)
+    local = labels - off
+    ok = (local >= 0) & (local < shard)
+    gold_local = jnp.take_along_axis(
+        ll, jnp.clip(local, 0, shard - 1)[..., None], axis=-1)[..., 0]
+    gold = jax.lax.psum(jnp.where(ok, gold_local, 0.0), TP_AXIS)
+    return lse - gold

@@ -1,0 +1,277 @@
+"""Mamba2 (SSD) blocks — chunked-parallel training scan + O(1)-state decode.
+
+State-space duality, chunked algorithm (Mamba2 paper §6): within a chunk the
+recurrence is computed as a masked quadratic form (attention-like, MXU
+friendly); across chunks a short ``lax.scan`` carries the (H, P, N) state.
+All decay exponentials are differences of a running log-decay cumsum, so
+every ``exp`` argument is ≤ 0 (numerically safe).
+
+TP sharding (DESIGN.md §5): heads over the "model" axis (head-major channel
+layout so the column split of d_inner is head-aligned); the (2·N)-dim B/C
+projections and their conv kernels are TP-replicated via ``tp_shared``;
+the gated norm is per-head (grouped RMSNorm) so it needs no collective.
+
+``ssd_reference`` is the sequential oracle used by tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (ShardCtx, TP_AXIS, _trunc_normal,
+                                 column_linear, column_linear_init,
+                                 fsdp_gather, maybe_tp_shared, row_linear,
+                                 row_linear_init)
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+def ssd_reference(x, dt, A, Bm, Cm, h0=None):
+    """Sequential oracle.  x: (b,l,h,p); dt: (b,l,h); A: (h,) (negative);
+    Bm, Cm: (b,l,n).  Returns (y (b,l,h,p), h_final (b,h,p,n))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hs, inp):
+        xt, dtt, bt, ct = inp                   # (b,h,p),(b,h),(b,n),(b,n)
+        decay = jnp.exp(dtt * A)                # (b,h)
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        hs = decay[..., None, None] * hs + upd
+        y = jnp.einsum("bhpn,bn->bhp", hs, ct)
+        return hs, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1), Bm.swapaxes(0, 1),
+          Cm.swapaxes(0, 1))
+    hF, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          jax.tree.map(lambda a: a.astype(jnp.float32), xs))
+    return ys.swapaxes(0, 1), hF
+
+
+def _segsum(s):
+    """s: (..., c) inclusive log-decay cumsum -> (..., c, c) matrix of
+    s[t] - s[i] for i <= t, -inf above the diagonal."""
+    c = s.shape[-1]
+    diff = s[..., :, None] - s[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked-parallel SSD.  Shapes as ssd_reference; fp32 internally."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    f32 = jnp.float32
+    x, dt, Bm, Cm = (t.astype(f32) for t in (x, dt, Bm, Cm))
+    A = A.astype(f32)
+    c = min(chunk, l)
+    pad = (-l) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // c
+    xc = x.reshape(b, nc, c, h, p)
+    dtc = dt.reshape(b, nc, c, h)
+    Bc = Bm.reshape(b, nc, c, n)
+    Cc = Cm.reshape(b, nc, c, n)
+
+    a = dtc * A[None, None, None, :]            # (b,nc,c,h) log-decay, <= 0
+    s = jnp.cumsum(a, axis=2)                   # inclusive within-chunk
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), f32)
+
+    # all per-chunk work (the O(c²) decay matrix L especially) lives INSIDE
+    # the checkpointed scan body: transient per chunk, recomputed on
+    # backward — never materialized for all chunks at once
+    @jax.checkpoint
+    def chunk_step(carry, inp):
+        xk, dtk, Bk, Ck, sk = inp       # (b,c,h,p) (b,c,h) (b,c,n)² (b,c,h)
+        G = jnp.einsum("btn,bin->bti", Ck, Bk)              # (b,c,c)
+        L = jnp.exp(_segsum(sk.transpose(0, 2, 1)))         # (b,h,c,c)
+        dx = dtk[..., None] * xk
+        Yd = jnp.einsum("bti,bhti,bihp->bthp", G, L, dx)
+        Yi = jnp.einsum("bch,bcn,bhpn->bchp", jnp.exp(sk), Ck, carry)
+        decay_out = jnp.exp(sk[:, -1:, :] - sk)             # (b,c,h)
+        states = jnp.einsum("bch,bchp,bcn->bhpn", decay_out, dx, Bk)
+        h_new = jnp.exp(sk[:, -1, :])[..., None, None] * carry + states
+        return h_new, Yd + Yi
+
+    xs = (xc.swapaxes(0, 1), dtc.swapaxes(0, 1), Bc.swapaxes(0, 1),
+          Cc.swapaxes(0, 1), s.swapaxes(0, 1))
+    hF, ys = jax.lax.scan(chunk_step, h0.astype(f32), xs)
+    y = ys.swapaxes(0, 1).reshape(b, nc * c, h, p)[:, :l]
+    return y, hF
+
+
+def ssd_decode_step(h_state, xt, dtt, A, bt, ct):
+    """One token.  h_state: (b,h,p,n); xt: (b,h,p); dtt: (b,h); bt/ct: (b,n).
+    Returns (y (b,h,p), new state)."""
+    f32 = jnp.float32
+    decay = jnp.exp(dtt.astype(f32) * A.astype(f32))
+    upd = (dtt.astype(f32)[..., None] * xt.astype(f32))[..., None] \
+        * bt.astype(f32)[:, None, None, :]
+    h_new = decay[..., None, None] * h_state.astype(f32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, ct.astype(f32))
+    return y, h_new
+
+
+# --------------------------------------------------------------------------
+# Causal depthwise conv (width w, shift-and-sum form)
+# --------------------------------------------------------------------------
+def causal_conv(u, kernel, state=None):
+    """u: (b, l, ch); kernel: (w, ch).  Causal depthwise conv + silu.
+    ``state``: (b, w-1, ch) trailing context (decode); returns (y, new_state).
+    """
+    w = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], w - 1, u.shape[-1]), u.dtype)
+    full = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    y = sum(full[:, j:j + u.shape[1]] * kernel[j].astype(u.dtype)
+            for j in range(w))
+    new_state = full[:, -(w - 1):] if w > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+def mamba_block_init(key, cfg, ctx: ShardCtx):
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_inner = sc.expand * d
+    n_heads = d_inner // sc.head_dim
+    n_local = max(1, n_heads // ctx.tp)
+    n = sc.state_dim
+    w = sc.conv_dim
+    ks = jax.random.split(key, 10)
+    fs = ctx.fsdp_spec()
+
+    px, sx = column_linear_init(ks[0], d, d_inner, ctx)
+    pz, sz = column_linear_init(ks[1], d, d_inner, ctx)
+    po, so = row_linear_init(ks[2], d_inner, d, ctx,
+                             std=1.0 / math.sqrt(d_inner))
+    dt_init = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[5], (n_heads,), jnp.float32,
+                                   math.log(1e-3), math.log(1e-1)))))
+    params = {
+        "in_x": px, "in_z": pz, "out": po,
+        "in_bc": _trunc_normal(ks[3], (d, 2 * n), 1 / math.sqrt(d),
+                               ctx.param_dtype),
+        "in_dt": _trunc_normal(ks[4], (d, n_heads), 1 / math.sqrt(d),
+                               ctx.param_dtype),
+        "dt_bias": dt_init,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "conv_x": _trunc_normal(ks[6], (w, d_inner), 1 / math.sqrt(w),
+                                ctx.param_dtype),
+        "conv_bc": _trunc_normal(ks[7], (w, 2 * n), 1 / math.sqrt(w),
+                                 ctx.param_dtype),
+        "norm": jnp.ones((d_inner,), ctx.param_dtype),
+        "ln": jnp.ones((d,), ctx.param_dtype),
+    }
+    specs = {
+        "in_x": sx, "in_z": sz, "out": so,
+        "in_bc": P(fs, None),
+        "in_dt": P(fs, TP_AXIS),
+        "dt_bias": P(TP_AXIS),
+        "A_log": P(TP_AXIS),
+        "D": P(TP_AXIS),
+        "conv_x": P(None, TP_AXIS),
+        "conv_bc": P(None, None),
+        "norm": P(TP_AXIS),
+        "ln": P(None),
+    }
+    return params, specs
+
+
+def _grouped_rmsnorm(scale, y, z, head_dim: int, eps: float):
+    """Gated per-head RMSNorm: norm(y * silu(z)) with head-local statistics
+    (collective-free under head sharding)."""
+    g = y * jax.nn.silu(z)
+    b, l, ch = g.shape
+    gh = g.reshape(b, l, ch // head_dim, head_dim).astype(jnp.float32)
+    var = jnp.mean(gh * gh, axis=-1, keepdims=True)
+    gh = gh * jax.lax.rsqrt(var + eps)
+    return (gh.reshape(b, l, ch) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_block_apply(params, x, ctx: ShardCtx, cfg, st, cache=None):
+    """Pre-norm Mamba2 block.  x: (B, S[, /tp w/ SP], d); returns
+    (x + mamba(norm(x)), new_cache).  cache = {"conv_x", "conv_bc", "ssd"}.
+    """
+    from repro.models.layers import rmsnorm, tp_copy, tp_reduce
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    n_local = max(1, n_heads // ctx.tp)
+    n = sc.state_dim
+
+    h = rmsnorm({"scale": params["ln"]}, x, cfg.norm_eps)
+    h = tp_copy(h, ctx)                                     # (B, S, d)
+    b, s, _ = h.shape
+
+    xs = column_linear(params["in_x"], h, ctx)              # (B,S,d_in/tp)
+    z = column_linear(params["in_z"], h, ctx)
+    cd = ctx.compute_dtype
+    w_bc = maybe_tp_shared(
+        fsdp_gather(params["in_bc"].astype(cd), ctx, axis=0), ctx)
+    bc = h @ w_bc                                           # (B,S,2N)
+    w_dt = fsdp_gather(params["in_dt"].astype(cd), ctx, axis=0)
+    dt_raw = h @ w_dt                                       # (B,S,H/tp)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    conv_x_k = params["conv_x"]                 # channel dim TP-sharded
+    conv_bc_k = maybe_tp_shared(params["conv_bc"], ctx)
+    cache = cache if isinstance(cache, dict) else {}
+    xs, conv_x_state = causal_conv(xs, conv_x_k,
+                                   cache.get("conv_x") if st.decoding else None)
+    bc, conv_bc_state = causal_conv(bc, conv_bc_k,
+                                    cache.get("conv_bc") if st.decoding else None)
+    Bm, Cm = bc[..., :n], bc[..., n:]
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, s, n_local, sc.head_dim)
+    if st.decoding:
+        y, ssd_state = ssd_decode_step(cache["ssd"], xh[:, 0], dt[:, 0],
+                                       A, Bm[:, 0], Cm[:, 0])
+        y = y[:, None]
+    else:
+        y, ssd_state = ssd_chunked(xh, dt, A, Bm, Cm, sc.chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(b, s, n_local * sc.head_dim).astype(ctx.compute_dtype)
+
+    y = _grouped_rmsnorm(params["norm"], y, z, sc.head_dim, cfg.norm_eps)
+    out = row_linear(params["out"], y, ctx)
+    out = tp_reduce(out, ctx)
+
+    new_cache = None
+    if not st.training:
+        new_cache = {"conv_x": conv_x_state, "conv_bc": conv_bc_state,
+                     "ssd": ssd_state}
+    return x + out, new_cache
+
+
+def mamba_cache_shape(cfg, ctx: ShardCtx, batch_local: int):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    n_local = max(1, n_heads // ctx.tp)
+    w = sc.conv_dim
+    return {
+        "conv_x": jax.ShapeDtypeStruct(
+            (batch_local, w - 1, d_inner // ctx.tp), jnp.bfloat16),
+        "conv_bc": jax.ShapeDtypeStruct(
+            (batch_local, w - 1, 2 * sc.state_dim), jnp.bfloat16),
+        "ssd": jax.ShapeDtypeStruct(
+            (batch_local, n_local, sc.head_dim, sc.state_dim), jnp.float32),
+    }

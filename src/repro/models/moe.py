@@ -1,0 +1,257 @@
+"""Mixture-of-Experts FFN with expert parallelism (DESIGN.md §4/§5).
+
+Routing is top-k softmax with a fixed per-expert capacity (dropped tokens
+fall back to the residual path).  Dispatch is sort-based — O(T·k) memory, no
+(T, E, C) one-hot tensor — which is what makes the 32k-token train shapes
+fit:
+
+    1. top-k expert ids per token -> flat (T·k,) assignment list
+    2. stable-sort by expert id; position-within-expert via cumulative counts
+    3. scatter tokens into a (E_pad, C, d) buffer (over-capacity slots drop)
+    4. all_to_all over the EP axis: (tp, E_local, C, d) -> (E_local, tp·C, d)
+    5. batched expert SwiGLU (experts stacked on the local leading dim)
+    6. all_to_all back, gather to token order, combine weighted by router
+
+Experts are sharded E_pad/tp per device over the EP axis (= the TP "model"
+axis for training; serving may pass a different axis).  E is padded to a
+multiple of the EP degree with dummy experts whose router logits are -inf.
+
+MoE consumes SEQ-SHARDED activations directly under SP (no tp_copy): the
+all_to_all already mixes tokens across the axis, so routing local tokens is
+both correct and 1/tp cheaper (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (ShardCtx, TP_AXIS, _trunc_normal,
+                                 fsdp_gather, maybe_tp_shared)
+from repro.models.transformer import mlp_apply, mlp_init
+
+
+def pad_experts(n_experts: int, ep: int) -> int:
+    return -(-n_experts // ep) * ep
+
+
+def capacity(tokens_local: int, top_k: int, e_pad: int, ep: int,
+             factor: float) -> int:
+    """Per-expert, per-source-device slot count.  Multiples of 8 for layout."""
+    c = math.ceil(tokens_local * top_k / e_pad * factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_init(key, cfg, ctx: ShardCtx, ep: Optional[int] = None):
+    """Routed experts (+ optional shared experts / dense residual).
+
+    Two expert layouts (DESIGN.md §5):
+      * default (training): E over the TP "model" axis, d over FSDP;
+      * ctx.moe_ep_axis == "data" (2D serving): E over "data", d_ff over
+        "model" — expert FFNs are row/column-parallel within each expert
+        and residency needs no gather (arctic).
+    """
+    two_d = ctx.moe_ep_axis is not None and ctx.moe_ep_axis != TP_AXIS
+    mc = cfg.moe
+    ep = ep or ctx.tp
+    e_pad = pad_experts(mc.n_experts, ep)
+    d, d_ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 6)
+
+    def expert_init(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "gate": _trunc_normal(k1, (d, d_ff), 1 / math.sqrt(d),
+                                  ctx.param_dtype),
+            "up": _trunc_normal(k2, (d, d_ff), 1 / math.sqrt(d),
+                                ctx.param_dtype),
+            "down": _trunc_normal(k3, (d_ff, d), 1 / math.sqrt(d_ff),
+                                  ctx.param_dtype),
+        }
+
+    experts = jax.vmap(expert_init)(jax.random.split(ks[0], e_pad))
+    fs = ctx.fsdp_spec()
+    if two_d:
+        ax = ctx.moe_ep_axis
+        expert_specs = {"gate": P(ax, None, TP_AXIS),
+                        "up": P(ax, None, TP_AXIS),
+                        "down": P(ax, TP_AXIS, None)}
+    else:
+        # experts stacked (E_pad, ...): E over the EP axis, d over FSDP
+        expert_specs = {"gate": P(TP_AXIS, fs, None),
+                        "up": P(TP_AXIS, fs, None),
+                        "down": P(TP_AXIS, fs, None)}
+    params = {
+        "router": _trunc_normal(ks[1], (d, e_pad), 0.02, jnp.float32),
+        "experts": experts,
+    }
+    specs = {"router": P(None, None), "experts": expert_specs}
+    if mc.n_shared:
+        ps, ss = mlp_init(ks[2], d, d_ff * mc.n_shared, ctx)
+        params["shared"], specs["shared"] = ps, ss
+        params["shared_gate"] = _trunc_normal(ks[4], (d, 1), 0.02,
+                                              jnp.float32)
+        specs["shared_gate"] = P(None, None)
+    if mc.dense_residual:
+        pd, sd = mlp_init(ks[3], d, d_ff, ctx)
+        params["dense"], specs["dense"] = pd, sd
+    return params, specs
+
+
+def _route(router_w, x, mc, e_pad: int):
+    """x: (T, d) -> (probs (T, k), idx (T, k) int32) — fp32 router math."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    if e_pad > mc.n_experts:
+        pad_mask = jnp.arange(e_pad) >= mc.n_experts
+        logits = jnp.where(pad_mask[None, :], -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, mc.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_i.astype(jnp.int32), logits
+
+
+def _dispatch_indices(top_i, e_pad: int, cap: int):
+    """Sort-based slot assignment.  Returns per-(token,k): expert id, slot id,
+    keep mask — plus the inverse permutation for combine."""
+    t, k = top_i.shape
+    flat_e = top_i.reshape(-1)                              # (T·k,)
+    order = jnp.argsort(flat_e, stable=True)                # sorted by expert
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e_pad)             # tokens/expert
+    starts = jnp.cumsum(counts) - counts                    # exclusive cumsum
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]         # rank w/in expert
+    keep = pos_in_e < cap
+    # scatter destinations in sorted order; invert to token order
+    inv = jnp.argsort(order, stable=True)
+    expert_of = sorted_e[inv]                               # == flat_e
+    slot_of = pos_in_e[inv]
+    keep = keep[inv]
+    return expert_of, slot_of, keep
+
+
+def _ep_all_to_all(buf, ep_axis: Optional[str], ep: int, forward: bool):
+    """(E_pad, C, d) <-> (E_local, ep·C, d) over the EP mesh axis.
+
+    all_to_all(split=0, concat=0) on a leading (ep, ...) dim swaps the
+    device axis with that dim: dim0 indexes destination before, source
+    after."""
+    if not ep_axis or ep == 1:
+        return buf
+    if forward:
+        e_pad, c, d = buf.shape
+        buf = buf.reshape(ep, e_pad // ep, c, d)            # dim0 = dest
+        buf = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0)
+        # (ep, E_local, C, d): dim0 = source device
+        return buf.transpose(1, 0, 2, 3).reshape(e_pad // ep, ep * c, d)
+    e_local, epc, d = buf.shape
+    c = epc // ep
+    buf = buf.reshape(e_local, ep, c, d).transpose(1, 0, 2, 3)  # dim0 = dest
+    buf = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0)
+    return buf.reshape(e_local * ep, c, d)
+
+
+def moe_apply(params, x, ctx: ShardCtx, cfg, ep_axis: Optional[str] = None):
+    """x: (B, S_local, d) — tokens stay sharded (SP-friendly).  Returns the
+    combined expert output (same shape).  Caller adds the residual."""
+    mc = cfg.moe
+    if ep_axis is None:
+        ep_axis = ctx.moe_ep_axis or (TP_AXIS if ctx.tp > 1 else None)
+    two_d = ep_axis is not None and ep_axis != TP_AXIS and ctx.tp > 1
+    ep = jax.lax.axis_size(ep_axis) if ep_axis else 1
+    b, s, d = x.shape
+    t = b * s
+    e_pad = pad_experts(mc.n_experts, ep)
+    e_local = e_pad // ep
+    cap = capacity(t, mc.top_k, e_pad, ep, mc.capacity_factor)
+
+    xt = x.reshape(t, d)
+    router_w = maybe_tp_shared(params["router"], ctx)
+    probs, top_i, logits = _route(router_w, xt, mc, e_pad)
+    expert_of, slot_of, keep = _dispatch_indices(top_i, e_pad, cap)
+
+    # ---- dispatch: (T·k) scatter into (E_pad, C, d) ----
+    tok_of = jnp.repeat(jnp.arange(t), mc.top_k)
+    buf = jnp.zeros((e_pad, cap, d), ctx.compute_dtype)
+    src = xt.astype(ctx.compute_dtype)[tok_of]
+    slot_ok = jnp.where(keep, slot_of, cap)                 # cap => dropped
+    buf = buf.at[expert_of, slot_ok].set(src, mode="drop")
+
+    # ---- EP exchange + batched expert FFN ----
+    buf = _ep_all_to_all(buf, ep_axis, ep, forward=True)    # (E_local, ep·C, d)
+    cd = ctx.compute_dtype
+    if two_d:
+        # 2D layout: d_ff sharded over TP — column×row parallel per expert,
+        # psum terminates the row-parallel down projection
+        w_g = params["experts"]["gate"].astype(cd)
+        w_u = params["experts"]["up"].astype(cd)
+        w_d = params["experts"]["down"].astype(cd)
+    else:
+        w_g = fsdp_gather(params["experts"]["gate"].astype(cd), ctx,
+                          axis=1)
+        w_u = fsdp_gather(params["experts"]["up"].astype(cd), ctx, axis=1)
+        w_d = fsdp_gather(params["experts"]["down"].astype(cd), ctx,
+                          axis=1)
+    h_g = jnp.einsum("ecd,edf->ecf", buf, w_g)
+    h_u = jnp.einsum("ecd,edf->ecf", buf, w_u)
+    h = jax.nn.silu(h_g) * h_u
+    out = jnp.einsum("ecf,efd->ecd", h, w_d)
+    if two_d:
+        out = jax.lax.psum(out, TP_AXIS)
+    out = _ep_all_to_all(out, ep_axis, ep, forward=False)   # (E_pad, C, d)
+
+    # ---- combine: gather slots back to tokens, weight by router probs ----
+    gathered = out[expert_of, jnp.minimum(slot_of, cap - 1)]      # (T·k, d)
+    w = (probs.reshape(-1) * keep).astype(jnp.float32)
+    combined = jnp.zeros((t, d), jnp.float32).at[tok_of].add(
+        gathered.astype(jnp.float32) * w[:, None])
+    y = combined.reshape(b, s, d).astype(x.dtype)
+
+    # ---- shared experts / dense residual (plain TP MLPs) ----
+    if mc.n_shared:
+        sh = mlp_apply(params["shared"], x, ctx)
+        gate = jax.nn.sigmoid(
+            x.astype(jnp.float32) @ maybe_tp_shared(params["shared_gate"],
+                                                    ctx))
+        y = y + sh * gate.astype(x.dtype)
+    if mc.dense_residual:
+        y = y + mlp_apply(params["dense"], x, ctx)
+    return y, _aux_loss(logits, top_i, mc, e_pad)
+
+
+def _aux_loss(logits, top_i, mc, e_pad: int):
+    """Switch-style load-balancing loss (mean over local tokens)."""
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    me = jnp.mean(probs, axis=0)
+    hits = jnp.zeros((e_pad,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    ce = hits / jnp.maximum(hits.sum(), 1.0)
+    return e_pad * jnp.sum(me * ce)
+
+
+# --------------------------------------------------------------------------
+# MoE transformer block (attention + MoE FFN)
+# --------------------------------------------------------------------------
+def moe_block_init(key, cfg, ctx: ShardCtx):
+    from repro.models.transformer import attn_init, rmsnorm_init
+    ks = jax.random.split(key, 4)
+    pa, sa = attn_init(ks[0], cfg, ctx)
+    pm, sm = moe_init(ks[1], cfg, ctx)
+    pn1, sn1 = rmsnorm_init(cfg.d_model, ctx)
+    pn2, sn2 = rmsnorm_init(cfg.d_model, ctx)
+    return ({"attn": pa, "moe": pm, "ln1": pn1, "ln2": pn2},
+            {"attn": sa, "moe": sm, "ln1": sn1, "ln2": sn2})
+
+
+def moe_block_apply(params, x, aux, ctx: ShardCtx, cfg, st, cache=None):
+    from repro.models.layers import rmsnorm
+    from repro.models.transformer import attn_apply
+    a, cache = attn_apply(params["attn"],
+                          rmsnorm(params["ln1"], x, cfg.norm_eps),
+                          aux, ctx, cfg, st, cache)
+    x = x + a
+    m, aux_loss = moe_apply(params["moe"],
+                            rmsnorm(params["ln2"], x, cfg.norm_eps), ctx, cfg)
+    return x + m, cache, aux_loss

@@ -1,0 +1,438 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan) — Beck et al., 2024.
+
+mLSTM is a gated linear-attention recurrence with *exponential* input gates
+and a running-max stabilizer (the paper's m_t).  We implement the chunkwise
+form (flash-linear-attention style): intra-chunk work is masked matmuls
+(MXU-friendly); the carried state (Ĉ, n̂) is stored log-stabilized by its own
+m_c so every ``exp`` argument stays ≤ 0.
+
+TP sharding (DESIGN.md §5): the value dim is column-sharded as
+(heads × v-parts) — with tp > n_heads each head's C rows split across
+tp/n_heads devices (C rows are independent given the shared per-head q/k/
+gates, which are computed from tp_shared replicated weights and sliced).
+sLSTM (tiny: d=1024) runs TP-replicated — its sequential recurrence would
+serialize any collective 4096×.
+
+Simplifications vs. the released xLSTM (noted in DESIGN.md): no learnable
+skip inside the mLSTM cell; sLSTM uses a 2× gated FFN.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (ShardCtx, TP_AXIS, _trunc_normal,
+                                 column_linear, column_linear_init,
+                                 fsdp_gather, maybe_tp_shared, rmsnorm,
+                                 row_linear, row_linear_init)
+from repro.models.mamba2 import causal_conv
+
+NEG = -1e30
+
+# §Perf lever (cell C): run the sLSTM recurrent einsum + gate streams in
+# bf16 (state updates stay fp32).  Halves the dominant per-step HBM traffic
+# of the sequential recurrence.  Toggled by benchmarks/perf_iterations.
+SLSTM_BF16_RECURRENCE = False
+
+
+# --------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel with stabilizers
+# --------------------------------------------------------------------------
+def mlstm_reference(q, k, v, i_gate, f_gate, carry=None):
+    """Sequential oracle.  q,k: (b,l,h,dk); v: (b,l,h,dv);
+    i_gate,f_gate: (b,l,h) pre-activations.  Returns (y, carry)."""
+    b, l, h, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    if carry is None:
+        carry = (jnp.zeros((b, h, dv, dk), f32), jnp.zeros((b, h, dk), f32),
+                 jnp.full((b, h), NEG, f32))
+    q = q.astype(f32) / math.sqrt(dk)
+
+    def step(c, inp):
+        C, n, m = c
+        qt, kt, vt, it, ft = inp
+        log_f = jax.nn.log_sigmoid(ft)                      # (b,h)
+        m_new = jnp.maximum(log_f + m, it)
+        fp = jnp.exp(log_f + m - m_new)
+        ip = jnp.exp(it - m_new)
+        C = fp[..., None, None] * C \
+            + ip[..., None, None] * jnp.einsum("bhv,bhk->bhvk", vt, kt)
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        y = num / den[..., None]
+        return (C, n, m_new), y
+
+    xs = jax.tree.map(lambda a: a.swapaxes(0, 1).astype(f32),
+                      (q, k, v, i_gate, f_gate))
+    carry, ys = jax.lax.scan(step, carry, xs)
+    return ys.swapaxes(0, 1), carry
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, chunk: int, carry=None):
+    """Chunkwise mLSTM.  Shapes as mlstm_reference.  fp32 internal."""
+    b, l, h, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    if carry is None:
+        carry = (jnp.zeros((b, h, dv, dk), f32), jnp.zeros((b, h, dk), f32),
+                 jnp.full((b, h), NEG, f32))
+    c = min(chunk, l)
+    pad = (-l) % c
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        # padding: i = -inf (no input), f-logit large (state preserved)
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=NEG)
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=30.0)
+    nc = q.shape[1] // c
+    qc = (q.astype(f32) / math.sqrt(dk)).reshape(b, nc, c, h, dk)
+    kc = k.astype(f32).reshape(b, nc, c, h, dk)
+    vc = v.astype(f32).reshape(b, nc, c, h, dv)
+    ic = i_gate.astype(f32).reshape(b, nc, c, h)
+    log_f = jax.nn.log_sigmoid(f_gate.astype(f32)).reshape(b, nc, c, h)
+    s = jnp.cumsum(log_f, axis=2)                           # inclusive
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    # the O(c²) intra-chunk log-weight matrix is built INSIDE the
+    # checkpointed body — transient per chunk, recomputed on backward.
+    # weight of (v_i k_i) in C_t is  Π_{j=i+1..t} f_j · i_i
+    #   = exp(s_t - s_i) · exp(ĩ_i)           (s inclusive)
+    @jax.checkpoint
+    def chunk_scan(cr, inp):
+        C, n, m_c = cr
+        qk, kk, vk, sk, ik = inp
+        wk = sk[:, :, None, :] - sk[:, None, :, :] \
+            + ik[:, None, :, :]                             # (b,t,i,h)
+        wk = jnp.where(tri[None, :, :, None], wk, NEG)
+        b_t = sk + m_c[:, None, :]                          # (b,c,h)
+        m_loc = jnp.maximum(jnp.max(wk, axis=2), b_t)       # (b,c,h)
+        m_loc = jax.lax.stop_gradient(m_loc)
+        wn = jnp.exp(wk - m_loc[:, :, None, :])             # (b,c,i,h)
+        bn = jnp.exp(b_t - m_loc)                           # (b,c,h)
+        scores = jnp.einsum("bthk,bihk->btih", qk, kk)      # q_t · k_i
+        num = jnp.einsum("btih,btih,bihv->bthv", scores, wn, vk) \
+            + jnp.einsum("bth,bhvk,bthk->bthv", bn, C, qk)
+        den = jnp.einsum("btih,btih->bth", scores, wn) \
+            + jnp.einsum("bth,bhk,bthk->bth", bn, n, qk)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))
+        y = num / den[..., None]
+        # ---- carry update (end of chunk) ----
+        s_last = sk[:, -1, :]                               # (b,h)
+        w_end = s_last[:, None, :] - sk + ik                # (b,c,h)
+        m_new = jnp.maximum(m_c + s_last, jnp.max(w_end, axis=1))
+        m_new = jax.lax.stop_gradient(m_new)
+        w_end_n = jnp.exp(w_end - m_new[:, None, :])
+        decay = jnp.exp(m_c + s_last - m_new)
+        C = decay[..., None, None] * C \
+            + jnp.einsum("bch,bchv,bchk->bhvk", w_end_n, vk, kk)
+        n = decay[..., None] * n + jnp.einsum("bch,bchk->bhk", w_end_n, kk)
+        return (C, n, m_new), y
+
+    xs = (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+          s.swapaxes(0, 1), ic.swapaxes(0, 1))
+    carry, ys = jax.lax.scan(chunk_scan, carry, xs)
+    y = ys.swapaxes(0, 1).reshape(b, nc * c, h, dv)[:, :l]
+    return y, carry
+
+
+def mlstm_decode_step(carry, qt, kt, vt, it, ft):
+    """One token.  qt,kt: (b,h,dk); vt: (b,h,dv); it,ft: (b,h)."""
+    f32 = jnp.float32
+    C, n, m = carry
+    dk = qt.shape[-1]
+    qt = qt.astype(f32) / math.sqrt(dk)
+    kt, vt, it, ft = (t.astype(f32) for t in (kt, vt, it, ft))
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    fp = jnp.exp(log_f + m - m_new)
+    ip = jnp.exp(it - m_new)
+    C = fp[..., None, None] * C \
+        + ip[..., None, None] * jnp.einsum("bhv,bhk->bhvk", vt, kt)
+    n = fp[..., None] * n + ip[..., None] * kt
+    num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], (C, n, m_new)
+
+
+# --------------------------------------------------------------------------
+# mLSTM block
+# --------------------------------------------------------------------------
+def _vh_layout(n_heads: int, dv: int, tp: int):
+    """(heads_local, v_local, r) for the heads × v-parts TP split."""
+    if tp <= n_heads:
+        assert n_heads % tp == 0
+        return n_heads // tp, dv, 1
+    r = tp // n_heads
+    assert tp % n_heads == 0 and dv % r == 0, (n_heads, dv, tp)
+    return 1, dv // r, r
+
+
+def mlstm_block_init(key, cfg, ctx: ShardCtx):
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_inner = sc.expand * d
+    hn = cfg.n_heads
+    dqk = sc.state_dim                       # per-head q/k dim
+    ks = jax.random.split(key, 10)
+    fs = ctx.fsdp_spec()
+    pu, su = column_linear_init(ks[0], d, d_inner, ctx)   # v path (sharded)
+    pz, sz = column_linear_init(ks[1], d, d_inner, ctx)   # output gate path
+    po, so = row_linear_init(ks[2], d_inner, d, ctx,
+                             std=1.0 / math.sqrt(d_inner))
+    params = {
+        "up_v": pu, "up_z": pz, "out": po,
+        # q/k/gates: TP-replicated (per-head, consumed sliced)
+        "wq": _trunc_normal(ks[3], (d, hn * dqk), 1 / math.sqrt(d),
+                            ctx.param_dtype),
+        "wk": _trunc_normal(ks[4], (d, hn * dqk), 1 / math.sqrt(d),
+                            ctx.param_dtype),
+        "w_if": _trunc_normal(ks[5], (d, 2 * hn), 0.02, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((hn,)),
+                                 jnp.linspace(3.0, 6.0, hn)]).astype(
+                                     jnp.float32),
+        "conv": _trunc_normal(ks[6], (sc.conv_dim, d), 1 / math.sqrt(
+            sc.conv_dim), ctx.param_dtype),
+        "ln": jnp.ones((d,), ctx.param_dtype),
+        "norm": jnp.ones((d_inner,), ctx.param_dtype),
+    }
+    specs = {
+        "up_v": su, "up_z": sz, "out": so,
+        "wq": P(fs, None), "wk": P(fs, None),
+        "w_if": P(None, None), "b_if": P(None),
+        "conv": P(None, None),
+        "ln": P(None), "norm": P(TP_AXIS),
+    }
+    return params, specs
+
+
+def _slice_heads(t, hn: int, ctx: ShardCtx):
+    """(B, S, hn, dk) replicated -> this device's head (r-fold replicated
+    when tp > hn)."""
+    if ctx.tp <= 1:
+        return t
+    if ctx.tp <= hn:
+        per = hn // ctx.tp
+        m = jax.lax.axis_index(TP_AXIS)
+        return jax.lax.dynamic_slice_in_dim(t, m * per, per, axis=2)
+    r = ctx.tp // hn
+    m = jax.lax.axis_index(TP_AXIS) // r
+    return jax.lax.dynamic_slice_in_dim(t, m, 1, axis=2)
+
+
+def mlstm_block_apply(params, x, ctx: ShardCtx, cfg, st, cache=None):
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_inner = sc.expand * d
+    hn = cfg.n_heads
+    dqk = sc.state_dim
+    h_loc, v_loc, r = _vh_layout(hn, d_inner // hn, ctx.tp)
+
+    from repro.models.layers import tp_copy, tp_reduce
+    h = rmsnorm({"scale": params["ln"]}, x, cfg.norm_eps)
+    h = tp_copy(h, ctx)                                     # (B,S,d)
+    b, s, _ = h.shape
+
+    v = column_linear(params["up_v"], h, ctx)               # (B,S,inner/tp)
+    z = column_linear(params["up_z"], h, ctx)
+    conv_k = maybe_tp_shared(params["conv"], ctx)
+    cache = cache if isinstance(cache, dict) else {}
+    hc, conv_state = causal_conv(h, conv_k,
+                                 cache.get("conv") if st.decoding else None)
+    cd = ctx.compute_dtype
+    wq = maybe_tp_shared(fsdp_gather(params["wq"].astype(cd), ctx, axis=0),
+                         ctx)
+    wk = maybe_tp_shared(fsdp_gather(params["wk"].astype(cd), ctx, axis=0),
+                         ctx)
+    q = (hc @ wq).reshape(b, s, hn, dqk)
+    k = (hc @ wk).reshape(b, s, hn, dqk)
+    w_if = maybe_tp_shared(params["w_if"], ctx)
+    b_if = maybe_tp_shared(params["b_if"], ctx)
+    gif = h.astype(jnp.float32) @ w_if + b_if
+    ig, fg = gif[..., :hn], gif[..., hn:]
+
+    q = _slice_heads(q, hn, ctx)
+    k = _slice_heads(k, hn, ctx)
+    ig = _slice_heads(ig[..., None], hn, ctx)[..., 0]
+    fg = _slice_heads(fg[..., None], hn, ctx)[..., 0]
+    vh = v.reshape(b, s, h_loc, v_loc)
+
+    if st.decoding:
+        y, carry = mlstm_decode_step(cache["mlstm"], q[:, 0], k[:, 0],
+                                     vh[:, 0], ig[:, 0], fg[:, 0])
+        y = y[:, None]
+    else:
+        y, carry = mlstm_chunked(q, k, vh, ig, fg, sc.chunk)
+    y = y.reshape(b, s, h_loc * v_loc).astype(ctx.compute_dtype)
+
+    # grouped (per-v-slice) RMSNorm, then output gate
+    from repro.models.mamba2 import _grouped_rmsnorm
+    y = _grouped_rmsnorm(params["norm"], y, z, v_loc, cfg.norm_eps)
+    out = tp_reduce(row_linear(params["out"], y, ctx), ctx)
+
+    new_cache = None
+    if not st.training:
+        new_cache = {"conv": conv_state, "mlstm": carry}
+    return x + out, new_cache
+
+
+def mlstm_cache_shape(cfg, ctx: ShardCtx, batch_local: int):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    hn = cfg.n_heads
+    h_loc, v_loc, _ = _vh_layout(hn, d_inner // hn, ctx.tp)
+    f32 = jnp.float32
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (batch_local, sc.conv_dim - 1, cfg.d_model), jnp.bfloat16),
+        "mlstm": (
+            jax.ShapeDtypeStruct((batch_local, h_loc, v_loc, sc.state_dim),
+                                 f32),
+            jax.ShapeDtypeStruct((batch_local, h_loc, sc.state_dim), f32),
+            jax.ShapeDtypeStruct((batch_local, h_loc), f32),
+        ),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM block (TP-replicated)
+# --------------------------------------------------------------------------
+def slstm_block_init(key, cfg, ctx: ShardCtx):
+    d = cfg.d_model
+    hn = cfg.n_heads
+    hd = d // hn
+    ks = jax.random.split(key, 8)
+    params = {
+        "w_gates": _trunc_normal(ks[0], (d, 4 * d), 1 / math.sqrt(d),
+                                 jnp.float32),
+        "r_gates": _trunc_normal(ks[1], (4, hn, hd, hd), 1 / math.sqrt(hd),
+                                 jnp.float32),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32)
+        .at[2 * d:3 * d].set(3.0),              # forget-gate bias
+        "ln": jnp.ones((d,), ctx.param_dtype),
+        "norm": jnp.ones((d,), ctx.param_dtype),
+        "conv": _trunc_normal(ks[2], (cfg.ssm.conv_dim, d),
+                              1 / math.sqrt(cfg.ssm.conv_dim),
+                              ctx.param_dtype),
+    }
+    pf, sf = {}, {}
+    pf["up"] = _trunc_normal(ks[3], (d, 2 * 2 * d), 1 / math.sqrt(d),
+                             ctx.param_dtype)
+    pf["down"] = _trunc_normal(ks[4], (2 * d, d), 1 / math.sqrt(2 * d),
+                               ctx.param_dtype)
+    params["ffn"] = pf
+    params["ln2"] = jnp.ones((d,), ctx.param_dtype)
+    specs = {
+        "w_gates": P(None, None), "r_gates": P(None, None, None, None),
+        "b_gates": P(None), "ln": P(None), "norm": P(None),
+        "conv": P(None, None),
+        "ffn": {"up": P(None, None), "down": P(None, None)},
+        "ln2": P(None),
+    }
+    return params, specs
+
+
+def slstm_scan(gates_x, r_gates, hn: int, h0=None):
+    """gates_x: (b, l, 4, hn, hd) input-driven pre-activations (z,i,f,o).
+    Sequential scan with recurrent per-head mixing.  Returns (y, carry)."""
+    b, l, _, hn_, hd = gates_x.shape
+    f32 = jnp.float32
+    rec_dt = jnp.bfloat16 if SLSTM_BF16_RECURRENCE else f32
+    if SLSTM_BF16_RECURRENCE:
+        gates_x = gates_x.astype(jnp.bfloat16)
+        r_gates = r_gates.astype(jnp.bfloat16)
+    if h0 is None:
+        zeros = jnp.zeros((b, hn, hd), f32)
+        h0 = (zeros, zeros, zeros, jnp.full((b, hn), NEG, f32))
+
+    @jax.checkpoint
+    def step(carry, gx):
+        c, n, hprev, m = carry
+        gx = gx.astype(f32)
+        rec = jnp.einsum("ghij,bhj->gbhi", r_gates.astype(rec_dt),
+                         hprev.astype(rec_dt)).astype(f32)
+        zt = jnp.tanh(gx[:, 0] + rec[0])
+        it = gx[:, 1] + rec[1]
+        ft = gx[:, 2] + rec[2]
+        ot = jax.nn.sigmoid(gx[:, 3] + rec[3])
+        log_f = jax.nn.log_sigmoid(ft)
+        m_head = jnp.max(jnp.maximum(log_f + m[..., None], it), axis=-1)
+        fp = jnp.exp(log_f + (m - m_head)[..., None])
+        ip = jnp.exp(it - m_head[..., None])
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_head), h
+
+    carry, ys = jax.lax.scan(step, h0,
+                             gates_x.swapaxes(0, 1).astype(f32))
+    return ys.swapaxes(0, 1), carry
+
+
+def slstm_block_apply(params, x, ctx: ShardCtx, cfg, st, cache=None):
+    from repro.models.layers import tp_copy, tp_reduce
+    d = cfg.d_model
+    hn = cfg.n_heads
+    hd = d // hn
+    h = rmsnorm({"scale": params["ln"]}, x, cfg.norm_eps)
+    h = tp_copy(h, ctx)
+    b, s, _ = h.shape
+    cache = cache if isinstance(cache, dict) else {}
+    conv_k = maybe_tp_shared(params["conv"], ctx)
+    hc, conv_state = causal_conv(h, conv_k,
+                                 cache.get("conv") if st.decoding else None)
+    wg = maybe_tp_shared(params["w_gates"], ctx)
+    bg = maybe_tp_shared(params["b_gates"], ctx)
+    # i/f gates see the conv path, z/o the direct path (xLSTM paper)
+    gx = h.astype(jnp.float32) @ wg + bg
+    gxc = hc.astype(jnp.float32) @ wg + bg
+    gates = jnp.stack([gx[..., :d], gxc[..., d:2 * d],
+                       gxc[..., 2 * d:3 * d], gx[..., 3 * d:]], axis=2)
+    gates = gates.reshape(b, s, 4, hn, hd)
+    rg = maybe_tp_shared(params["r_gates"], ctx)
+    y, carry = slstm_scan(gates, rg, hn, cache.get("slstm")
+                          if st.decoding else None)
+    y = y.reshape(b, s, d).astype(ctx.compute_dtype)
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
+    # SP re-scatter: slice this device's seq shard back out
+    if ctx.seq_parallel and ctx.tp > 1:
+        m = jax.lax.axis_index(TP_AXIS)
+        y = jax.lax.dynamic_slice_in_dim(y, m * (s // ctx.tp), s // ctx.tp,
+                                         axis=1)
+    x = x + y
+    # gated FFN (replicated)
+    h2 = rmsnorm({"scale": params["ln2"]}, x, cfg.norm_eps)
+    up = maybe_tp_shared(params["ffn"]["up"], ctx)
+    down = maybe_tp_shared(params["ffn"]["down"], ctx)
+    uu = h2 @ up.astype(ctx.compute_dtype)
+    a, g = jnp.split(uu, 2, axis=-1)
+    x = x + (jax.nn.gelu(a) * g) @ down.astype(ctx.compute_dtype)
+
+    new_cache = None
+    if not st.training:
+        new_cache = {"conv": conv_state, "slstm": carry}
+    return x, new_cache
+
+
+def slstm_cache_shape(cfg, ctx: ShardCtx, batch_local: int):
+    d = cfg.d_model
+    hn = cfg.n_heads
+    hd = d // hn
+    f32 = jnp.float32
+    st = jax.ShapeDtypeStruct((batch_local, hn, hd), f32)
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (batch_local, cfg.ssm.conv_dim - 1, d), jnp.bfloat16),
+        "slstm": (st, st, st,
+                  jax.ShapeDtypeStruct((batch_local, hn), f32)),
+    }

@@ -1,0 +1,55 @@
+"""Axis-aware collective helpers used inside the train/serve shard_map.
+
+All model code runs in one shard_map over the mesh ("pod","data","model") —
+or ("data","model") single-pod — with manual collectives (DESIGN.md §4).
+These helpers centralize the conventions:
+
+  * TP axis name is "model"; DP axes are ("pod","data") / ("data",).
+  * `psum_tp` / `reduce_scatter_tp` terminate row-parallel matmuls
+    (reduce-scatter form = Megatron sequence parallelism).
+  * FSDP param gather/scatter runs over the DP axes; JAX's AD transposes
+    `all_gather` into `psum_scatter` automatically, which IS the ZeRO-3
+    gradient reduce-scatter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TP_AXIS = "model"
+
+
+def tp_size() -> int:
+    return jax.lax.axis_size(TP_AXIS)
+
+
+def tp_index() -> jax.Array:
+    return jax.lax.axis_index(TP_AXIS)
+
+
+def psum_tp(x):
+    return jax.lax.psum(x, TP_AXIS)
+
+
+def all_gather_tp(x, axis: int = 0, tiled: bool = True):
+    return jax.lax.all_gather(x, TP_AXIS, axis=axis, tiled=tiled)
+
+
+def reduce_scatter_tp(x, axis: int = 1):
+    """Sum over TP and keep the local 1/tp slice along `axis` (SP form)."""
+    return jax.lax.psum_scatter(x, TP_AXIS, scatter_dimension=axis,
+                                tiled=True)
+
+
+def fsdp_gather(w_shard: jax.Array, dp_axes: tuple[str, ...],
+                axis: int = 0) -> jax.Array:
+    """ZeRO-3 param gather; AD transposes to a grad reduce-scatter."""
+    if not dp_axes:
+        return w_shard
+    return jax.lax.all_gather(w_shard, dp_axes, axis=axis, tiled=True)
+
+
+def dp_pmean(x, dp_axes: tuple[str, ...]):
+    if not dp_axes:
+        return x
+    return jax.lax.pmean(x, dp_axes)

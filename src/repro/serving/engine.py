@@ -1,0 +1,90 @@
+"""A small batched serving engine on top of prefill/decode.
+
+Synchronous continuous batching: requests join the active batch at fixed
+slots; finished slots are refilled from the queue.  Greedy or temperature
+sampling.  This is the example-scale engine (examples/serve_batched.py);
+the serve_step module is what the dry-run lowers at production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import serve_step as ss
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 32
+    out: Optional[list[int]] = None
+
+
+class Engine:
+    def __init__(self, setup: ss.ServeSetup, params, *, eos_id: int = -1,
+                 temperature: float = 0.0, seed: int = 0):
+        self.setup = setup
+        self.params = params
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.key = jax.random.key(seed)
+        self._prefill = None
+        self._decode = None
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        logits = logits[:, :self.setup.arch.vocab]
+        if self.temperature <= 0:
+            return np.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        g = jax.random.gumbel(sub, logits.shape)
+        return np.argmax(np.asarray(logits) / self.temperature
+                         + np.asarray(g), axis=-1)
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Static-batch generation: pads requests into one batch of size
+        setup.global_batch, prefills the common prompt region, then decodes
+        until every request hits max_new (or EOS)."""
+        B = self.setup.global_batch
+        assert len(requests) <= B, (len(requests), B)
+        reqs = list(requests) + [
+            Request(rid=-1, prompt=[0], max_new=1)
+            for _ in range(B - len(requests))]
+        max_prompt = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, max_prompt), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :len(r.prompt)] = r.prompt      # left-aligned
+        batch = {"tokens": jnp.asarray(toks)}
+        if self._prefill is None:
+            self._prefill = self.setup and ss.make_prefill(self.setup)(batch)
+        logits, cache = self._prefill(self.params, batch)
+        cur = np.array([max_prompt] * B, np.int32)
+        next_tok = self._sample(np.asarray(jax.device_get(logits)))
+        for r in reqs:
+            r.out = []
+        max_new = max(r.max_new for r in reqs)
+        done = np.zeros((B,), bool)
+        dbatch = {"tokens": jnp.asarray(next_tok[:, None]),
+                  "cur_len": jnp.asarray(cur)}
+        if self._decode is None:
+            self._decode = ss.make_decode(self.setup)(dbatch)
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if not done[i]:
+                    r.out.append(int(next_tok[i]))
+                    if int(next_tok[i]) == self.eos_id or \
+                            len(r.out) >= r.max_new:
+                        done[i] = True
+            if done.all() or cur[0] + 1 >= self.setup.cache_len:
+                break
+            logits, cache = self._decode(
+                self.params, cache,
+                {"tokens": jnp.asarray(next_tok[:, None]),
+                 "cur_len": jnp.asarray(cur)})
+            cur = cur + 1
+            next_tok = self._sample(np.asarray(jax.device_get(logits)))
+        return reqs[:len(requests)]

@@ -1,0 +1,168 @@
+"""Distributed serving steps: prefill + single-token decode with a sharded
+KV/state cache.
+
+Sharding (DESIGN.md §5):
+  * params: bf16, TP over "model"; arctic-480b additionally shards over
+    "data" (gather-at-use — the only way 960 GB of bf16 weights fit);
+  * cache: batch over the DP axes, kv-heads over "model" (r-fold replicated
+    when kv < tp, stored as a padded sharded dim);
+  * long_500k (global_batch=1): context parallelism — the cache SEQUENCE
+    dim shards over the DP axes and partial attention is LSE-merged
+    (attention.decode_attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import Model, globalize
+from repro.models.layers import ShardCtx
+from repro.train.train_step import shard_map, localize
+
+
+@dataclasses.dataclass
+class ServeSetup:
+    arch: ArchConfig
+    mesh: Mesh
+    model: Model
+    ctx: ShardCtx
+    dp_axes: tuple[str, ...]
+    context_parallel: bool
+    global_batch: int
+    cache_len: int                      # global capacity
+    enc_len: int = 0
+    param_specs: Any = None
+    cache_specs: Any = None
+    cache_sds_local: Any = None         # local ShapeDtypeStructs
+
+    @property
+    def axis_sizes(self) -> dict:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    @property
+    def p_dp(self) -> int:
+        return int(np.prod([self.axis_sizes[a] for a in self.dp_axes])) \
+            if self.dp_axes else 1
+
+    def sharding(self, spec):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    def cache_sds_global(self):
+        return globalize(self.cache_sds_local, self.cache_specs,
+                         self.axis_sizes)
+
+
+def build_serve(arch: ArchConfig, mesh: Mesh, shape: ShapeConfig,
+                param_dtype=jnp.bfloat16) -> ServeSetup:
+    names = tuple(mesh.axis_names)
+    sizes = dict(zip(names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+    p_dp = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+    context_parallel = shape.global_batch < p_dp
+    # params: TP-only, except memory-forced FSDP-serving (plan.serve_fsdp)
+    fsdp_axes: tuple[str, ...] = ()
+    if arch.plan.serve_fsdp:
+        fsdp_axes = tuple(a for a in dp_axes if sizes.get(a, 1) > 1)
+    moe_ep = "data" if (arch.plan.serve_moe_ep_data
+                        and sizes.get("data", 1) > 1) else None
+    ctx = ShardCtx(
+        tp=tp, dp_axes=dp_axes, fsdp_axes=fsdp_axes, seq_parallel=False,
+        cache_seq_axes=(dp_axes if context_parallel else ()),
+        moe_ep_axis=moe_ep,
+        param_dtype=param_dtype, compute_dtype=jnp.bfloat16)
+    model = Model(arch)
+    _, specs = model.abstract_init(ctx)
+    batch_local = shape.global_batch if context_parallel \
+        else shape.global_batch // p_dp
+    assert context_parallel or shape.global_batch % p_dp == 0
+    cp_deg = p_dp if context_parallel else 1
+    assert shape.seq_len % cp_deg == 0
+    enc_len = shape.seq_len if arch.family == "audio" else 0
+    cache_sds, cache_specs = model.cache_shape(
+        ctx, batch_local, shape.seq_len // cp_deg, enc_len=enc_len)
+    return ServeSetup(arch=arch, mesh=mesh, model=model, ctx=ctx,
+                      dp_axes=dp_axes, context_parallel=context_parallel,
+                      global_batch=shape.global_batch,
+                      cache_len=shape.seq_len, enc_len=enc_len,
+                      param_specs=specs, cache_specs=cache_specs,
+                      cache_sds_local=cache_sds)
+
+
+def batch_specs(setup: ServeSetup, batch) -> dict:
+    bdp = None if setup.context_parallel else \
+        (tuple(setup.dp_axes) or None)
+    out = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":
+            out[k] = P(None, bdp, *([None] * (v.ndim - 2)))
+        else:
+            out[k] = P(bdp, *([None] * (v.ndim - 1)))
+    return out
+
+
+def make_prefill(setup: ServeSetup):
+    """jitted (params, batch) -> (last-token logits, cache)."""
+    model, ctx = setup.model, setup.ctx
+    logits_spec = _logits_spec(setup)
+
+    def prefill_fn(params, batch):
+        cache0 = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), setup.cache_sds_local,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        logits, cache = model.prefill(params, batch, ctx, cache0)
+        return logits, cache
+
+    def jitted(batch):
+        bspecs = batch_specs(setup, batch)
+        f = shard_map(prefill_fn, setup.mesh,
+                      in_specs=(setup.param_specs, bspecs),
+                      out_specs=(logits_spec, setup.cache_specs))
+        return jax.jit(f)
+    return jitted
+
+
+def make_decode(setup: ServeSetup):
+    """jitted (params, cache, batch) -> (logits, cache).  batch: tokens
+    (B, 1), cur_len (B,) [+ mrope]."""
+    model, ctx = setup.model, setup.ctx
+    logits_spec = _logits_spec(setup)
+
+    def decode_fn(params, cache, batch):
+        return model.decode(params, cache, batch, ctx)
+
+    def jitted(batch):
+        bspecs = batch_specs(setup, batch)
+        f = shard_map(decode_fn, setup.mesh,
+                      in_specs=(setup.param_specs, setup.cache_specs,
+                                bspecs),
+                      out_specs=(logits_spec, setup.cache_specs))
+        return jax.jit(f, donate_argnums=(1,))
+    return jitted
+
+
+def _logits_spec(setup: ServeSetup):
+    bdp = None if setup.context_parallel else \
+        (tuple(setup.dp_axes) or None)
+    tp_ax = "model" if setup.ctx.tp > 1 else None
+    return P(bdp, tp_ax)
+
+
+def serve_params(setup: ServeSetup, key=None):
+    """Initialize bf16 serving params sharded onto the mesh (examples/
+    tests; real deployments restore from a checkpoint)."""
+    shardings = setup.sharding(setup.param_specs)
+
+    def init_fn(k):
+        params, _ = setup.model.init(k, setup.ctx)
+        return params
+    return jax.jit(init_fn, out_shardings=shardings)(
+        key if key is not None else jax.random.key(0))

@@ -1,0 +1,349 @@
+"""Optimizers from scratch: AdamW, Adafactor, SGD-M — sharding-aware.
+
+States mirror the parameter pytree, so under shard_map they inherit the
+parameter sharding (elementwise updates need nothing more).  Two places DO
+need sharding knowledge, and take the parameter PartitionSpecs:
+
+  * global-norm gradient clipping — per-leaf local sum-squares must be
+    psummed over exactly the axes that shard that leaf (replicated leaves
+    must NOT be psummed).  Leaves are grouped by their axis-set so the
+    whole clip costs a handful of scalar psums.
+  * Adafactor's factored second moment — the row/col means run over sharded
+    dims, so local sums are psummed over those dims' axes and divided by the
+    GLOBAL dim size.
+
+Adafactor (Shazeer & Stern, 2018) is what makes arctic-480b's optimizer
+state fit: the (d_in × d_out) second moment collapses to d_in + d_out
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"             # "adamw" | "adafactor" | "sgdm"
+    b1: float = 0.9
+    b2: float = 0.95                # adafactor: decay exponent target
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0          # 0 = off
+    adafactor_eps1: float = 1e-30
+    adafactor_clip: float = 1.0     # update RMS clip (d)
+    momentum: float = 0.9           # sgdm
+
+
+# --------------------------------------------------------------------------
+# spec utilities
+# --------------------------------------------------------------------------
+def _axes_of(spec) -> tuple[str, ...]:
+    out: list[str] = []
+    if spec is None:
+        return ()
+    for entry in spec:
+        if entry is None:
+            continue
+        out.extend(entry if isinstance(entry, tuple) else (entry,))
+    return tuple(sorted(set(out)))
+
+
+def _dim_axes(spec, ndim: int) -> list[tuple[str, ...]]:
+    """Per-dim mesh axes for a leaf (spec may be shorter than ndim)."""
+    out = [()] * ndim
+    if spec is None:
+        return out
+    for i, entry in enumerate(spec):
+        if entry is None or i >= ndim:
+            continue
+        out[i] = entry if isinstance(entry, tuple) else (entry,)
+    return out
+
+
+def _sumsq(g) -> jax.Array:
+    """fp32 sum of squares without materializing a fp32 copy of stacked
+    layer leaves (map over the layer dim)."""
+    if g.ndim >= 3 and g.shape[0] > 1:
+        return jnp.sum(jax.lax.map(
+            lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), g))
+    return jnp.sum(jnp.square(g.astype(jnp.float32)))
+
+
+def global_norm(grads, specs) -> jax.Array:
+    """L2 norm of the full (global) gradient under sharding."""
+    leaves = jax.tree.leaves(grads)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(leaves) == len(spec_leaves), "grads/specs tree mismatch"
+    groups: dict[tuple[str, ...], jax.Array] = {}
+    for g, s in zip(leaves, spec_leaves):
+        key = _axes_of(s)
+        groups[key] = groups.get(key, 0.0) + _sumsq(g)
+    total = jnp.float32(0.0)
+    for axes, acc in groups.items():
+        if axes:
+            acc = jax.lax.psum(acc, axes)
+        total = total + acc
+    return jnp.sqrt(total)
+
+
+def clip_by_global_norm(grads, specs, max_norm: float):
+    norm = global_norm(grads, specs)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    # scale in the grad's own dtype: no fp32 copy of the whole tree
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# --------------------------------------------------------------------------
+# Optimizer API
+# --------------------------------------------------------------------------
+class Optimizer:
+    """init(params) -> state; update(grads, state, params, lr) ->
+    (new_params, new_state, metrics).  All called INSIDE shard_map."""
+
+    def __init__(self, cfg: OptConfig, specs=None):
+        self.cfg = cfg
+        self.specs = specs
+
+    def init(self, params) -> Any:
+        raise NotImplementedError
+
+    def state_specs(self, param_specs) -> Any:
+        raise NotImplementedError
+
+    def update(self, grads, state, params, lr):
+        raise NotImplementedError
+
+
+class AdamW(Optimizer):
+    def init(self, params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros,
+                "v": jax.tree.map(jnp.copy, zeros),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def state_specs(self, param_specs):
+        return {"m": param_specs,
+                "v": jax.tree.map(lambda s: s, param_specs,
+                                  is_leaf=lambda s: isinstance(s, P)),
+                "t": P()}
+
+    def update(self, grads, state, params, lr):
+        c = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, self.specs, c.grad_clip) \
+            if c.grad_clip else (grads, global_norm(grads, self.specs))
+        t = state["t"] + 1
+        bc1 = 1.0 - c.b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - c.b2 ** t.astype(jnp.float32)
+
+        def upd1(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = c.b1 * m + (1 - c.b1) * g
+            v = c.b2 * v + (1 - c.b2) * g * g
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + c.eps)
+            step = step + c.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        def upd(p, g, m, v):
+            # scan-stacked layer leaves: update one layer at a time so the
+            # fp32 elementwise chain's working set is one layer, not L —
+            # the lever that fits arctic's 35×-stacked expert leaves.
+            # optimization_barrier pins the per-slice convert inside the
+            # loop (XLA would otherwise hoist convert(slice(stack)) into a
+            # whole-stack fp32 copy).
+            if p.ndim >= 3 and p.shape[0] > 1:
+                return jax.lax.map(
+                    lambda a: upd1(*jax.lax.optimization_barrier(a)),
+                    (p, g, m, v))
+            return upd1(p, g, m, v)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "t": t}, {"grad_norm": gnorm}
+
+
+class SGDM(Optimizer):
+    def init(self, params):
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32)}
+
+    def state_specs(self, param_specs):
+        return {"m": param_specs, "t": P()}
+
+    def update(self, grads, state, params, lr):
+        c = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, self.specs, c.grad_clip) \
+            if c.grad_clip else (grads, global_norm(grads, self.specs))
+
+        def upd(p, g, m):
+            m = c.momentum * m + g.astype(jnp.float32)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (m + c.weight_decay * p32)
+            return p32.astype(p.dtype), m
+
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "t": state["t"] + 1}, {"grad_norm": gnorm}
+
+
+class Adafactor(Optimizer):
+    """Factored second moment over the trailing two dims (leaves with
+    ndim >= 2); 1-D leaves keep a full second moment.  No momentum."""
+
+    def _factored(self, leaf) -> bool:
+        return leaf.ndim >= 2
+
+    def init(self, params):
+        def st(p):
+            if self._factored(p):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree.map(st, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def state_specs(self, param_specs):
+        # needs leaf shapes to know factoring: specs alone suffice if we
+        # follow the same rule on the spec length
+        def st(s):
+            entries = tuple(s) if s is not None else ()
+            if len(entries) >= 2:
+                return {"r": P(*entries[:-1]),
+                        "c": P(*(entries[:-2] + entries[-1:]))}
+            return {"v": s}
+        return {"s": jax.tree.map(st, param_specs,
+                                  is_leaf=lambda s: isinstance(s, P)),
+                "t": P()}
+
+    def _mean(self, x, dim: int, axes: Sequence[str], global_n: int):
+        """Mean over (possibly sharded) dim."""
+        s = jnp.sum(x, axis=dim)
+        if axes:
+            s = jax.lax.psum(s, tuple(axes))
+        return s / float(global_n)
+
+    def update(self, grads, state, params, lr):
+        c = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, self.specs, c.grad_clip) \
+            if c.grad_clip else (grads, global_norm(grads, self.specs))
+        t = state["t"] + 1
+        beta2 = 1.0 - t.astype(jnp.float32) ** -0.8    # paper schedule
+
+        spec_leaves = jax.tree.leaves(self.specs,
+                                      is_leaf=lambda s: isinstance(s, P))
+        p_leaves, tdef = jax.tree.flatten(params)
+        g_leaves = jax.tree.leaves(grads)
+        s_leaves = jax.tree.leaves(state["s"],
+                                   is_leaf=lambda x: isinstance(x, dict)
+                                   and ("r" in x or "v" in x))
+        def leaf_update(pl, gl, sl, dims, spec):
+            """One logical parameter matrix (scan-stacked leaves are mapped
+            over their layer dim below, so every intermediate here is one
+            layer's worth)."""
+            g = gl.astype(jnp.float32)
+            g2 = g * g + c.adafactor_eps1
+            if pl.ndim >= 2:
+                row_glob = pl.shape[-1]
+                for ax in dims[-1]:
+                    row_glob *= jax.lax.axis_size(ax)
+                col_glob = pl.shape[-2]
+                for ax in dims[-2]:
+                    col_glob *= jax.lax.axis_size(ax)
+                r = beta2 * sl["r"] + (1 - beta2) * self._mean(
+                    g2, -1, dims[-1], row_glob)
+                cc = beta2 * sl["c"] + (1 - beta2) * self._mean(
+                    g2, -2, dims[-2], col_glob)
+                # v̂ = r ⊗ c / mean(r)
+                r_mean = self._mean(r[..., None], -2, dims[-2],
+                                    col_glob)[..., 0]
+                denom = jnp.sqrt(r[..., :, None] * cc[..., None, :]
+                                 / jnp.maximum(r_mean[..., None, None],
+                                               c.adafactor_eps1))
+                u = g / jnp.maximum(denom, 1e-30)
+                new_sl = {"r": r, "c": cc}
+            else:
+                v = beta2 * sl["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(v + c.adafactor_eps1)
+                new_sl = {"v": v}
+            # per-matrix RMS clip (global mean of u²)
+            n_glob = 1
+            for i, sz in enumerate(pl.shape):
+                d = sz
+                for ax in dims[i]:
+                    d *= jax.lax.axis_size(ax)
+                n_glob *= d
+            sq = jnp.sum(u * u)
+            ax_all = _axes_of(spec)
+            if ax_all:
+                sq = jax.lax.psum(sq, tuple(ax_all))
+            rms = jnp.sqrt(sq / float(n_glob))
+            u = u / jnp.maximum(1.0, rms / c.adafactor_clip)
+            p32 = pl.astype(jnp.float32)
+            p32 = p32 - lr * (u + c.weight_decay * p32)
+            return p32.astype(pl.dtype), new_sl
+
+        new_p, new_s = [], []
+        for pl, gl, sl, spec in zip(p_leaves, g_leaves, s_leaves,
+                                    spec_leaves):
+            dims = _dim_axes(spec, pl.ndim)
+            if pl.ndim >= 3 and pl.shape[0] > 1 and dims[0] == ():
+                # stacked layer dim: map so the fp32 working set is one
+                # layer (arctic's 35-layer expert stacks would otherwise
+                # materialize L× fp32 intermediates); the barrier pins the
+                # per-slice converts inside the loop
+                np_, ns_ = jax.lax.map(
+                    lambda a: leaf_update(
+                        *jax.lax.optimization_barrier((a[0], a[1], a[2])),
+                        dims[1:],
+                        P(*tuple(spec)[1:]) if spec is not None else None),
+                    (pl, gl, sl))
+            else:
+                np_, ns_ = leaf_update(pl, gl, sl, dims, spec)
+            new_p.append(np_)
+            new_s.append(ns_)
+        params_out = jax.tree.unflatten(tdef, new_p)
+        s_out = jax.tree.unflatten(
+            jax.tree.structure(state["s"],
+                               is_leaf=lambda x: isinstance(x, dict)
+                               and ("r" in x or "v" in x)), new_s)
+        return params_out, {"s": s_out, "t": t}, {"grad_norm": gnorm}
+
+
+def make(name: str, cfg: OptConfig, specs=None) -> Optimizer:
+    table = {"adamw": AdamW, "adafactor": Adafactor, "sgdm": SGDM}
+    return table[name](cfg, specs)
+
+
+# --------------------------------------------------------------------------
+# flat-space AdamW (ZeRO-1 bucket shards)
+# --------------------------------------------------------------------------
+def flat_adamw_init(n: int):
+    return {"m": jnp.zeros((n,), jnp.float32),
+            "v": jnp.zeros((n,), jnp.float32)}
+
+
+def flat_adamw_update(p, g, st, t, lr, cfg: OptConfig):
+    """1-D shard update (states sharded over DP = ZeRO-1)."""
+    g = g.astype(jnp.float32)
+    m = cfg.b1 * st["m"] + (1 - cfg.b1) * g
+    v = cfg.b2 * st["v"] + (1 - cfg.b2) * g * g
+    bc1 = 1.0 - cfg.b1 ** t.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** t.astype(jnp.float32)
+    step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+    step = step + cfg.weight_decay * p
+    return p - lr * step, {"m": m, "v": v}

@@ -1,0 +1,545 @@
+"""The distributed train step: one shard_map over the whole mesh wrapping
+loss -> backward -> gradient aggregation (the paper's subject) -> update.
+
+Two DP modes (DESIGN.md §4):
+
+  ddp   params replicated over DP.  Gradients are raveled into 25 MB buckets
+        and each bucket is aggregated by the configured compressor across
+        the DP axes — the JAX analogue of PyTorch-DDP + comm-hook that the
+        paper benchmarks.  Optional ZeRO-1: each DP rank updates a 1/p slice
+        of every bucket (optimizer state sharded) and all-gathers the
+        updated parameters.
+  fsdp  params sharded over ctx.fsdp_axes (+ TP); the per-layer all_gather's
+        AD transpose IS the ZeRO-3 reduce-scatter.  With HSDP (fsdp over
+        "data" only) the surviving pod-axis reduction runs the compressor on
+        gradient *shards* — the paper's method applied exactly where the
+        bandwidth is scarce.
+
+Loss scaling makes every path produce the same global-mean gradient:
+``S = Πdp / (N_tokens_global · Πfsdp)`` so that post-transpose sums over the
+fsdp axes and the final pmean over the compress axes land on
+``Σ ∂(local)/∂w / N_global``.  Replicated-over-fsdp leaves (norm scales
+etc.) get an explicit psum over the fsdp axes instead.
+
+Compressor state (error feedback, PowerSGD warm starts) is carried with a
+leading device dim — local (1, ...), global (n_devices, ...) sharded over
+every mesh axis — which is correct for any mixture of per-device and
+replicated state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import aggregator as agg_mod
+from repro.core import bucketing
+from repro.models import Model
+from repro.models.layers import ShardCtx
+from repro.train import optimizer as opt_mod
+
+try:
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except ImportError:  # older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+MOE_AUX_COEF = 0.01
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+@dataclasses.dataclass
+class TrainSetup:
+    """Everything needed to init/run/lower distributed training for one
+    (arch × mesh) combination."""
+    arch: ArchConfig
+    mesh: Mesh
+    model: Model
+    ctx: ShardCtx
+    dp_axes: tuple[str, ...]
+    fsdp_axes: tuple[str, ...]
+    agg_cfg: agg_mod.AggregatorConfig
+    opt_cfg: opt_mod.OptConfig
+    param_specs: Any = None
+    state_specs: Any = None          # full TrainState spec tree
+    zero1: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    def axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
+
+    @property
+    def p_dp(self) -> int:
+        return _prod(self.axis_size(a) for a in self.dp_axes)
+
+    @property
+    def p_fsdp(self) -> int:
+        return _prod(self.axis_size(a) for a in self.fsdp_axes)
+
+    def sharding(self, spec):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec,
+                            is_leaf=lambda s: isinstance(s, P))
+
+
+def build(arch: ArchConfig, mesh: Mesh,
+          opt_cfg: Optional[opt_mod.OptConfig] = None,
+          **plan_overrides) -> TrainSetup:
+    plan = dataclasses.replace(arch.plan, **plan_overrides) \
+        if plan_overrides else arch.plan
+    arch = dataclasses.replace(arch, plan=plan)
+    names = tuple(mesh.axis_names)
+    sizes = dict(zip(names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+    multi_pod = "pod" in names and sizes.get("pod", 1) > 1
+    if plan.dp_mode == "fsdp":
+        fsdp_axes = tuple(a for a in dp_axes
+                          if a != "pod" or plan.fsdp_shard_pods)
+        fsdp_axes = tuple(a for a in fsdp_axes if sizes.get(a, 1) > 1)
+    else:
+        fsdp_axes = ()
+    zero1 = plan.dp_mode == "ddp" and plan.zero1
+    ctx = ShardCtx(
+        tp=tp,
+        dp_axes=dp_axes,
+        fsdp_axes=fsdp_axes,
+        seq_parallel=bool(plan.seq_parallel and tp > 1),
+        # ZeRO-1: replicated params are bf16 working copies; the fp32
+        # master lives in the DP-sharded optimizer state (mixed-precision
+        # ZeRO-1 — what makes the 2.7B DDP archs fit 16 GB/chip).
+        # plan.param_dtype="bfloat16" = T5X-style bf16 weights + fp32
+        # optimizer stats (arctic-480b).
+        param_dtype=jnp.bfloat16
+        if (zero1 or plan.param_dtype == "bfloat16") else jnp.float32,
+        gather_quant=None if plan.gather_quant == "none"
+        else plan.gather_quant,
+    )
+    agg_cfg = agg_mod.from_plan(plan, multi_pod=multi_pod)
+    if plan.dp_mode == "fsdp":
+        # compressor applies only to DP axes NOT folded into FSDP
+        comp = tuple(a for a in agg_cfg.compress_axes if a not in fsdp_axes
+                     and sizes.get(a, 1) > 1)
+        agg_cfg = dataclasses.replace(agg_cfg, compress_axes=comp,
+                                      raw_axes=())
+    else:
+        agg_cfg = dataclasses.replace(
+            agg_cfg,
+            compress_axes=tuple(a for a in agg_cfg.compress_axes
+                                if sizes.get(a, 1) > 1),
+            raw_axes=tuple(a for a in agg_cfg.raw_axes
+                           if sizes.get(a, 1) > 1))
+    ocfg = opt_cfg or opt_mod.OptConfig(name=plan.optimizer)
+    setup = TrainSetup(arch=arch, mesh=mesh, model=Model(arch), ctx=ctx,
+                       dp_axes=dp_axes, fsdp_axes=fsdp_axes,
+                       agg_cfg=agg_cfg, opt_cfg=ocfg,
+                       zero1=zero1)
+    _, specs = setup.model.abstract_init(ctx)
+    setup.param_specs = specs
+    setup.state_specs = _state_specs(setup)
+    return setup
+
+
+# --------------------------------------------------------------------------
+# state construction
+# --------------------------------------------------------------------------
+def localize(sds_tree, spec_tree, mesh: Mesh):
+    """Global ShapeDtypeStructs + specs -> per-device (shard_map local)
+    shapes.  Inverse of models.model.globalize."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def f(sds, spec):
+        shape = list(sds.shape)
+        if spec is not None:
+            for i, entry in enumerate(spec):
+                if entry is None or i >= len(shape):
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                for ax in axes:
+                    assert shape[i] % sizes.get(ax, 1) == 0, \
+                        (sds.shape, spec, ax)
+                    shape[i] //= sizes.get(ax, 1)
+        return jax.ShapeDtypeStruct(tuple(shape), sds.dtype)
+    return jax.tree.map(f, sds_tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _grads_like_local(setup: TrainSetup):
+    """LOCAL (per-device) gradient shapes — what bucketing sees inside
+    shard_map (TP/FSDP shards; grads carry the param dtype)."""
+    shapes, _ = setup.model.abstract_init(setup.ctx)
+    return localize(shapes, setup.param_specs, setup.mesh)
+
+
+def _bucket_layout(setup: TrainSetup):
+    return bucketing.layout_for(_grads_like_local(setup),
+                                setup.agg_cfg.bucket_mb)
+
+
+def _zero1_shard_len(setup: TrainSetup, size: int) -> int:
+    p = setup.p_dp
+    return -(-size // p)
+
+
+def _state_specs(setup: TrainSetup):
+    pspecs = setup.param_specs
+    all_ax = setup.all_axes
+    dev = P(all_ax)        # flat per-device 1-D state
+    spec: dict = {"step": P(), "params": pspecs}
+    if setup.zero1:
+        layout = _bucket_layout(setup)
+        spec["opt"] = {"t": P(),
+                       "buckets": tuple(
+                           {"master": dev, "m": dev, "v": dev}
+                           for _ in range(layout.n_buckets))}
+    else:
+        opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg, pspecs)
+        spec["opt"] = opt.state_specs(pspecs)
+    comp = setup.agg_cfg.build()
+    if setup.agg_cfg.compressor != "none" and setup.agg_cfg.compress_axes:
+        layout = _bucket_layout(setup)
+        n_eff = _agg_sizes(setup, layout)
+        states = []
+        for n in n_eff:
+            st_shape = jax.eval_shape(
+                lambda k: comp.init_state(n, k), jax.random.key(0))
+            states.append(jax.tree.map(
+                lambda s: P(all_ax, *([None] * len(s.shape))), st_shape))
+        spec["agg"] = tuple(states)
+    else:
+        spec["agg"] = ()
+    return spec
+
+
+def _agg_sizes(setup: TrainSetup, layout) -> list[int]:
+    """Per-bucket element counts the compressor sees (DDP: bucket sizes;
+    FSDP: the same buckets are built over the local shard space)."""
+    return list(layout.sizes)
+
+
+def _n_devices(setup: TrainSetup) -> int:
+    return int(np.prod(setup.mesh.devices.shape))
+
+
+def init_state(setup: TrainSetup, key: jax.Array):
+    """Builds the sharded TrainState.
+
+    Initialization runs OUTSIDE shard_map on global logical arrays (the
+    repo-wide convention: init global + specs, apply local), then jit's
+    out_shardings scatter it onto the mesh.  Per-device state (error
+    feedback, ZeRO-1 shards) starts replicated-identical (zeros / shared
+    warm starts), which every compressor's contract allows.
+    """
+    layout = _bucket_layout(setup)
+    comp = setup.agg_cfg.build()
+    n_dev = _n_devices(setup)
+
+    def init_fn(key):
+        params, _ = setup.model.init(key, setup.ctx)
+        state: dict = {"step": jnp.zeros((), jnp.int32), "params": params}
+        if setup.zero1:
+            shard_lens = [_zero1_shard_len(setup, s) for s in layout.sizes]
+            state["opt"] = {
+                "t": jnp.zeros((), jnp.int32),
+                "buckets": tuple(
+                    {"master": jnp.zeros((sl * n_dev,), jnp.float32),
+                     "m": jnp.zeros((sl * n_dev,), jnp.float32),
+                     "v": jnp.zeros((sl * n_dev,), jnp.float32)}
+                    for sl in shard_lens)}
+        else:
+            opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg,
+                               setup.param_specs)
+            state["opt"] = opt.init(params)
+        if setup.agg_cfg.compressor != "none" and \
+                setup.agg_cfg.compress_axes:
+            ks = jax.random.split(jax.random.fold_in(key, 7),
+                                  layout.n_buckets)
+            states = tuple(
+                jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None],
+                                               (n_dev,) + x.shape),
+                    comp.init_state(n, ks[i]))
+                for i, n in enumerate(_agg_sizes(setup, layout)))
+            state["agg"] = states
+        else:
+            state["agg"] = ()
+        return state
+
+    shardings = setup.sharding(setup.state_specs)
+    state = jax.jit(init_fn, out_shardings=shardings)(
+        jax.random.key(0) if key is None else key)
+    if setup.zero1:
+        state = _fill_zero1_master(setup, state, layout)
+    return state
+
+
+def fresh_agg_state(setup: TrainSetup, key):
+    """Properly-initialized compressor state (sharded) — used at init and
+    after an elastic reshard invalidates the per-device saved state."""
+    layout = _bucket_layout(setup)
+    comp = setup.agg_cfg.build()
+    n_dev = _n_devices(setup)
+    if setup.agg_cfg.compressor == "none" or             not setup.agg_cfg.compress_axes:
+        return ()
+
+    def init_fn(k):
+        ks = jax.random.split(k, layout.n_buckets)
+        return tuple(
+            jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_dev,) + x.shape),
+                comp.init_state(n, ks[i]))
+            for i, n in enumerate(_agg_sizes(setup, layout)))
+
+    shardings = setup.sharding(setup.state_specs["agg"])
+    return jax.jit(init_fn, out_shardings=shardings)(key)
+
+
+def _fill_zero1_master(setup: TrainSetup, state, layout):
+    """Slice each (local) param bucket's DP shard into the fp32 master."""
+    dp = setup.dp_axes
+    p_dp = setup.p_dp
+
+    def fill(params, buckets):
+        p_buckets = bucketing.to_buckets(params, layout)
+        out = []
+        rank = jax.lax.axis_index(dp)
+        for i, pb in enumerate(p_buckets):
+            sl = _zero1_shard_len(setup, layout.sizes[i])
+            pad = sl * p_dp - layout.sizes[i]
+            if pad:
+                pb = jnp.pad(pb, (0, pad))
+            master = jax.lax.dynamic_slice_in_dim(
+                pb.astype(jnp.float32), rank * sl, sl)
+            out.append({**jax.tree.map(lambda x: x, buckets[i]),
+                        "master": master[None]})
+        return tuple(out)
+
+    pspec = setup.param_specs
+    bspec = setup.state_specs["opt"]["buckets"]
+    # inside shard_map the per-device state carries the leading device dim
+    bspec_local = tuple(
+        {k: P(setup.all_axes) for k in b} for b in bspec)
+    f = shard_map(fill, setup.mesh, in_specs=(pspec, bspec),
+                  out_specs=bspec)
+    new_buckets = jax.jit(f)(state["params"], state["opt"]["buckets"])
+    state["opt"] = {**state["opt"], "buckets": new_buckets}
+    return state
+
+
+# --------------------------------------------------------------------------
+# the step
+# --------------------------------------------------------------------------
+def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
+    """Returns a jitted ``step(state, batch, lr) -> (state, metrics)``."""
+    model = setup.model
+    ctx = setup.ctx
+    arch = setup.arch
+    layout = _bucket_layout(setup)
+    aggregator = agg_mod.GradAggregator(setup.agg_cfg)
+    dp = setup.dp_axes
+    fsdp = setup.fsdp_axes
+    p_dp = setup.p_dp
+    p_fsdp = setup.p_fsdp
+    scale_axes = p_dp // p_fsdp
+
+    def loss_fn(params, batch):
+        loss_sum, ntok, moe_aux = model.loss(params, batch, ctx)
+        n_glob = jax.lax.psum(ntok, dp) if dp else ntok
+        scaled = loss_sum * (scale_axes / n_glob.astype(jnp.float32))
+        if arch.moe.n_experts:
+            scaled = scaled + MOE_AUX_COEF * moe_aux / p_fsdp
+        return scaled, (loss_sum, ntok, moe_aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def norm_replicated_over_fsdp(grads):
+        """Leaves whose spec has no fsdp axis never went through the
+        reduce-scatter transpose: psum them over the fsdp axes."""
+        if not fsdp:
+            return grads
+
+        def f(g, s):
+            axes = opt_mod._axes_of(s)
+            if any(a in axes for a in fsdp):
+                return g
+            return jax.lax.psum(g, fsdp)
+        return jax.tree.map(f, grads, setup.param_specs,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    def aggregate(grads, agg_states):
+        """Returns aggregated grads + new compressor states."""
+        if setup.agg_cfg.compressor == "none" or \
+                not (setup.agg_cfg.compress_axes or setup.agg_cfg.raw_axes):
+            return grads, agg_states
+        squeezed = tuple(jax.tree.map(lambda x: x[0], st)
+                         for st in agg_states)
+        buckets = bucketing.to_buckets(grads, layout)
+        outs, news = [], []
+        for i, b in enumerate(buckets):
+            st = squeezed[i] if squeezed else ()
+            ob, ns = aggregator._aggregate_one(b, st)
+            outs.append(ob)
+            news.append(ns)
+        out = bucketing.from_buckets(outs, grads, layout)
+        if squeezed:
+            news = tuple(jax.tree.map(lambda x: x[None], ns) for ns in news)
+            return out, news
+        return out, agg_states
+
+    def aggregate_raw(grads):
+        """none-compressor path: plain pmean over the configured axes."""
+        axes = tuple(setup.agg_cfg.raw_axes) + \
+            tuple(setup.agg_cfg.compress_axes)
+        if not axes:
+            return grads
+        return jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
+
+    def zero1_update(params, grads, opt_state, lr):
+        """Flat-bucket ZeRO-1: slice DP shard, update, all-gather params."""
+        t = opt_state["t"] + 1
+        g_buckets = bucketing.to_buckets(grads, layout)
+        rank = jax.lax.axis_index(dp)
+        new_p, new_b = [], []
+        for i, gb in enumerate(g_buckets):
+            sl = _zero1_shard_len(setup, layout.sizes[i])
+            pad = sl * p_dp - layout.sizes[i]
+            if pad:
+                gb = jnp.pad(gb, (0, pad))
+            gs = jax.lax.dynamic_slice_in_dim(gb.astype(jnp.float32),
+                                              rank * sl, sl)
+            st = jax.tree.map(lambda x: x[0], opt_state["buckets"][i])
+            master, st2 = opt_mod.flat_adamw_update(
+                st["master"], gs, {"m": st["m"], "v": st["v"]}, t, lr,
+                setup.opt_cfg)
+            new_b.append(jax.tree.map(lambda x: x[None],
+                                      {"master": master, **st2}))
+            full = jax.lax.all_gather(master.astype(layout.dtype), dp,
+                                      axis=0, tiled=True)
+            if pad:
+                full = full[:layout.sizes[i]]
+            new_p.append(full)
+        params_out = bucketing.from_buckets(new_p, params, layout)
+        return params_out, {"t": t, "buckets": tuple(new_b)}
+
+    def one_micro(params, batch):
+        (scaled, (loss_sum, ntok, aux)), grads = grad_fn(params, batch)
+        return grads, loss_sum, ntok, aux
+
+    def step_fn(state, batch, lr):
+        params = state["params"]
+        if accum > 1:
+            def micro(carry, mb):
+                g_acc, l_acc, n_acc, a_acc = carry
+                g, l, n, a = one_micro(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l,
+                        n_acc + n, a_acc + a), None
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            (grads, loss_sum, ntok, aux), _ = jax.lax.scan(
+                micro, (zeros, jnp.float32(0), jnp.int32(0),
+                        jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            aux = aux / accum
+        else:
+            grads, loss_sum, ntok, aux = one_micro(params, batch)
+
+        grads = norm_replicated_over_fsdp(grads)
+        if setup.agg_cfg.compressor == "none":
+            grads = aggregate_raw(grads)
+            new_agg = state["agg"]
+        else:
+            grads, new_agg = aggregate(grads, state["agg"])
+
+        if setup.zero1:
+            new_params, new_opt = zero1_update(params, grads,
+                                               state["opt"], lr)
+            gnorm = opt_mod.global_norm(grads, setup.param_specs)
+        else:
+            opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg,
+                               setup.param_specs)
+            new_params, new_opt, om = opt.update(grads, state["opt"],
+                                                 params, lr)
+            gnorm = om["grad_norm"]
+
+        loss_g = jax.lax.psum(loss_sum, dp) if dp else loss_sum
+        ntok_g = jax.lax.psum(ntok, dp) if dp else ntok
+        metrics = {"loss": loss_g / jnp.maximum(
+                       ntok_g.astype(jnp.float32), 1.0),
+                   "tokens": ntok_g,
+                   "grad_norm": gnorm,
+                   "moe_aux": aux}
+        new_state = {"step": state["step"] + 1, "params": new_params,
+                     "opt": new_opt, "agg": new_agg}
+        return new_state, metrics
+
+    batch_spec_fn = make_batch_specs(setup)
+
+    def jitted(batch_example):
+        bspecs = batch_spec_fn(batch_example)
+        f = shard_map(step_fn, setup.mesh,
+                      in_specs=(setup.state_specs, bspecs, P()),
+                      out_specs=(setup.state_specs,
+                                 {"loss": P(), "tokens": P(),
+                                  "grad_norm": P(), "moe_aux": P()}))
+        return jax.jit(f, donate_argnums=(0,))
+
+    return jitted
+
+
+def make_batch_specs(setup: TrainSetup):
+    dp = tuple(setup.dp_axes) or None
+
+    def fn(batch):
+        specs = {}
+        for k, v in batch.items():
+            if k == "mrope_positions":
+                specs[k] = P(None, dp, *([None] * (v.ndim - 2)))
+            else:
+                specs[k] = P(dp, *([None] * (v.ndim - 1)))
+        return specs
+    return fn
+
+
+def local_sgd_sync(setup: TrainSetup):
+    """Pod-axis parameter averaging for the --sync-every local-SGD mode
+    (bounded-staleness straggler mitigation, DESIGN.md §4)."""
+    axes = tuple(a for a in ("pod",) if a in setup.all_axes
+                 and setup.axis_size(a) > 1
+                 and a not in setup.fsdp_axes)
+    if not axes:
+        return None
+
+    def sync(state):
+        params = jax.tree.map(lambda p: jax.lax.pmean(p, axes),
+                              state["params"])
+        return {**state, "params": params}
+
+    f = shard_map(sync, setup.mesh, in_specs=(setup.state_specs,),
+                  out_specs=setup.state_specs)
+    return jax.jit(f, donate_argnums=(0,))

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src/ layout import path (tests run as `PYTHONPATH=src pytest tests/`)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see ONE
+# device.  Multi-device semantics are exercised via subprocess scripts in
+# tests/dist/ which set --xla_force_host_platform_device_count themselves.

@@ -1,0 +1,42 @@
+"""Bucketing invariants (hypothesis property tests, DESIGN.md §7.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bucketing
+
+shapes_strategy = st.lists(
+    st.tuples(st.integers(1, 7), st.integers(1, 9)), min_size=1, max_size=6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=shapes_strategy,
+       bucket_kb=st.floats(min_value=0.001, max_value=0.05))
+def test_roundtrip(shapes, bucket_kb):
+    tree = {f"w{i}": jnp.arange(np.prod(s), dtype=jnp.float32).reshape(s)
+            + 100 * i for i, s in enumerate(shapes)}
+    layout = bucketing.layout_for(tree, bucket_kb / 1024)   # kb -> mb
+    buckets = bucketing.to_buckets(tree, layout)
+    assert sum(b.shape[0] for b in buckets) == layout.n_elements
+    assert all(b.shape[0] == s for b, s in zip(buckets, layout.sizes))
+    back = bucketing.from_buckets(buckets, tree, layout)
+    for k in tree:
+        np.testing.assert_array_equal(back[k], tree[k])
+
+
+@settings(max_examples=20, deadline=None)
+@given(shapes=shapes_strategy)
+def test_map_buckets_identity(shapes):
+    tree = {f"w{i}": jnp.ones(s) * i for i, s in enumerate(shapes)}
+    layout = bucketing.layout_for(tree, 0.001)
+    out = bucketing.map_buckets(lambda i, b: b * 2.0, tree, layout)
+    for k in tree:
+        np.testing.assert_allclose(out[k], tree[k] * 2.0)
+
+
+def test_last_bucket_short():
+    tree = {"a": jnp.zeros((1000,))}
+    layout = bucketing.layout_for(tree, 0.001)  # 262 elems/bucket
+    assert layout.sizes[-1] <= layout.bucket_elems
+    assert sum(layout.sizes) == 1000

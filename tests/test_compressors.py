@@ -1,0 +1,197 @@
+"""Compressor unit/property tests (DESIGN.md §7.1).
+
+Collectives run under a size-1 mesh axis ("data") so aggregate() is exactly
+the single-worker compression round-trip; multi-worker semantics live in
+tests/dist/.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.compression import base as cbase
+from repro.kernels import ref
+
+
+def one_dev_aggregate(comp, bucket, state, steps=1):
+    """Run aggregate() under a 1-device mesh; returns (outs, final state)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def run(b, st):
+        outs = []
+        for _ in range(steps):
+            o, st = comp.aggregate(b, st, ("data",))
+            outs.append(o)
+        return jnp.stack(outs), st
+
+    st_spec = jax.tree.map(lambda _: P(), state)
+    f = jax.shard_map(run, mesh=mesh, in_specs=(P(None), st_spec),
+                      out_specs=(P(None), st_spec), check_vma=False)
+    return f(bucket, state)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return jax.random.normal(jax.random.key(0), (1000,))
+
+
+def test_factory_covers_table3():
+    for name in ("none", "powersgd", "signsgd", "mstopk", "randomk",
+                 "qsgd", "terngrad"):
+        c = cbase.make(name)
+        assert isinstance(c.all_reduce_compatible, bool)
+    # paper Table 3 flags
+    assert cbase.make("powersgd").all_reduce_compatible
+    assert cbase.make("randomk").all_reduce_compatible
+    assert not cbase.make("signsgd").all_reduce_compatible
+    assert not cbase.make("mstopk").all_reduce_compatible
+    assert not cbase.make("qsgd").all_reduce_compatible
+    assert not cbase.make("terngrad").all_reduce_compatible
+
+
+def test_compression_ratios(g):
+    n = g.shape[0]
+    assert cbase.make("signsgd").compression_ratio(n) == pytest.approx(
+        32, rel=0.05)
+    assert cbase.make("mstopk", frac=0.01).compression_ratio(n) == \
+        pytest.approx(50, rel=0.1)      # 8B per kept element
+    assert cbase.make("qsgd", bits=8).compression_ratio(n) == \
+        pytest.approx(4, rel=0.05)
+    r4 = cbase.make("powersgd", rank=4)
+    assert r4.compression_ratio(1 << 20) > 30
+
+
+# ---------------------------------------------------------------- powersgd
+def test_powersgd_reconstruction_improves_with_rank(g):
+    errs = []
+    for rank in (1, 4, 16):
+        comp = cbase.make("powersgd", rank=rank, min_cols=16)
+        st = comp.init_state(g.shape[0], jax.random.key(1))
+        outs, _ = one_dev_aggregate(comp, g, st, steps=1)
+        errs.append(float(jnp.linalg.norm(outs[0] - g)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_powersgd_error_feedback_telescopes(g):
+    """Σ decoded + err_T == Σ inputs exactly (EF conservation)."""
+    comp = cbase.make("powersgd", rank=2, min_cols=16)
+    st = comp.init_state(g.shape[0], jax.random.key(1))
+    outs, st_f = one_dev_aggregate(comp, g, st, steps=5)
+    lhs = jnp.sum(outs, axis=0) + st_f.err
+    np.testing.assert_allclose(lhs, 5 * g, rtol=2e-4, atol=2e-4)
+
+
+def test_powersgd_power_iterations_converge(g):
+    """Repeated aggregation of the SAME matrix ~ power iteration: the
+    reconstruction error of the fresh input decreases."""
+    comp = cbase.make("powersgd", rank=4, min_cols=16)
+    st = comp.init_state(g.shape[0], jax.random.key(1))
+    errs = []
+    for _ in range(4):
+        # zero the error feedback so each round sees the raw g
+        st = st._replace(err=jnp.zeros_like(st.err))
+        outs, st = one_dev_aggregate(comp, g, st, steps=1)
+        errs.append(float(jnp.linalg.norm(outs[0] - g)))
+    assert errs[-1] < errs[0]
+
+
+# ---------------------------------------------------------------- signsgd
+def test_signsgd_output_is_sign_times_scale(g):
+    comp = cbase.make("signsgd", error_feedback=False)
+    st = comp.init_state(g.shape[0], jax.random.key(1))
+    outs, _ = one_dev_aggregate(comp, g, st)
+    out = outs[0]
+    scale = jnp.mean(jnp.abs(g))
+    np.testing.assert_allclose(jnp.abs(out), scale, rtol=1e-5)
+    signs_match = jnp.sign(out) == jnp.where(g >= 0, 1.0, -1.0)
+    assert bool(jnp.all(signs_match))
+
+
+def test_majority_vote_math():
+    """Hand-built 3-worker bitmaps -> exact majority."""
+    w = jnp.array([[0b1010], [0b1000], [0b0011]], jnp.uint32)
+    votes = ref.popcount_votes(w, 4)
+    # bit0: only w2 -> 1; bit1: w0,w2 -> 2; bit2: none -> 0; bit3: w0,w1 -> 2
+    np.testing.assert_array_equal(votes, [1, 2, 0, 2])
+    assert list((2 * votes >= 3).astype(int)) == [0, 1, 0, 1]
+
+
+def test_pack_unpack_roundtrip(g):
+    packed = ref.pack_signs(g)
+    bits = ref.unpack_signs(packed, g.shape[0])
+    np.testing.assert_array_equal(bits, (g >= 0).astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------- mstopk
+def test_mstopk_keeps_k_largest(g):
+    comp = cbase.make("mstopk", frac=0.05, error_feedback=False)
+    st = comp.init_state(g.shape[0], jax.random.key(1))
+    outs, _ = one_dev_aggregate(comp, g, st)
+    out = outs[0]
+    k = comp.k_for(g.shape[0])
+    nz = jnp.nonzero(out)[0]
+    assert nz.shape[0] == k
+    thresh = jnp.sort(jnp.abs(g))[-k]
+    assert bool(jnp.all(jnp.abs(g[nz]) >= thresh - 1e-6))
+    np.testing.assert_allclose(out[nz], g[nz], rtol=1e-6)
+
+
+def test_mstopk_error_feedback_telescopes(g):
+    comp = cbase.make("mstopk", frac=0.02, error_feedback=True)
+    st = comp.init_state(g.shape[0], jax.random.key(1))
+    outs, st_f = one_dev_aggregate(comp, g, st, steps=4)
+    np.testing.assert_allclose(jnp.sum(outs, 0) + st_f.err, 4 * g,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- randomk
+def test_randomk_unbiased(g):
+    comp = cbase.make("randomk", error_feedback=False)
+    comp.rescale = True
+    n = g.shape[0]
+    acc = jnp.zeros_like(g)
+    trials = 64
+    st = comp.init_state(n, jax.random.key(2))
+    for _ in range(trials):
+        outs, st = one_dev_aggregate(comp, g, st)
+        acc = acc + outs[0]
+    mean = acc / trials
+    # E[out] = g; MC error ~ |g|*sqrt(n/k/trials)
+    err = float(jnp.linalg.norm(mean - g) / jnp.linalg.norm(g))
+    assert err < 1.5, err
+
+
+# ---------------------------------------------------------------- qsgd
+def test_qsgd_unbiased_and_bounded(g):
+    levels = 7
+    norm = jnp.linalg.norm(g) + 1e-12
+    acc = jnp.zeros_like(g)
+    trials = 100
+    for i in range(trials):
+        q = ref.qsgd_quantize(g, norm, levels, jax.random.key(i))
+        assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= levels
+        acc = acc + q.astype(jnp.float32) * (norm / levels)
+    mean = acc / trials
+    err = float(jnp.max(jnp.abs(mean - g)))
+    # per-element MC std ≈ (norm/levels)/2/sqrt(trials)
+    assert err < float(norm / levels), err
+
+
+# ---------------------------------------------------------------- terngrad
+def test_terngrad_values_and_unbiasedness():
+    g = jax.random.normal(jax.random.key(3), (500,))
+    comp = cbase.make("terngrad", error_feedback=False)
+    st = comp.init_state(g.shape[0], jax.random.key(4))
+    acc = jnp.zeros_like(g)
+    trials = 150
+    scale = jnp.max(jnp.abs(g)) + 1e-12
+    for _ in range(trials):
+        outs, st = one_dev_aggregate(comp, g, st)
+        out = outs[0]
+        vals = jnp.unique(jnp.round(out / scale, 5))
+        assert set(np.asarray(vals)).issubset({-1.0, 0.0, 1.0})
+        acc = acc + out
+    err = float(jnp.linalg.norm(acc / trials - g) / jnp.linalg.norm(g))
+    assert err < 0.5, err

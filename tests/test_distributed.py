@@ -1,0 +1,34 @@
+"""Runner for the multi-device subprocess tests in tests/dist/.
+
+Each script sets --xla_force_host_platform_device_count itself (the main
+pytest process must keep seeing ONE device), asserts internally, and prints
+"OK <name>" on success.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+SCRIPTS = [
+    "dist_aggregate_oracle.py",
+    "dist_equivalence.py",
+    "dist_fault_tolerance.py",
+]
+
+
+@pytest.mark.parametrize("script", SCRIPTS)
+def test_dist(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "dist", script)],
+        capture_output=True, text=True, timeout=1800, env=env)
+    if proc.returncode != 0:
+        print("STDOUT:\n", proc.stdout[-4000:])
+        print("STDERR:\n", proc.stderr[-4000:])
+    assert proc.returncode == 0, f"{script} failed"
+    assert f"OK {script[:-3]}" in proc.stdout

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on system invariants (deliverable c):
+performance-model monotonicity/limits, quantized-gather error bounds,
+roofline-parser conservation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perfmodel import calibration as cal
+from repro.core.perfmodel import costs
+from repro.core.perfmodel import model as pm
+
+MB = 2 ** 20
+
+
+@settings(max_examples=40, deadline=None)
+@given(model_mb=st.floats(10, 2000), t_comp_ms=st.floats(5, 2000),
+       p=st.integers(2, 512), gbps=st.floats(0.5, 100))
+def test_sync_time_at_least_linear_and_monotone_in_bw(model_mb, t_comp_ms,
+                                                      p, gbps):
+    w = pm.Workload("w", model_mb * MB, t_comp_ms / 1e3)
+    hw = cal.PAPER_HW.with_net(gbps)
+    t = pm.sync_sgd_time(w, p, hw)
+    # never faster than the compute floor (γ ≥ 1)
+    assert t >= w.t_comp - 1e-12
+    # more bandwidth never hurts
+    t2 = pm.sync_sgd_time(w, p, cal.PAPER_HW.with_net(gbps * 2))
+    assert t2 <= t + 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_mb=st.floats(0.1, 1000), p=st.integers(2, 1024))
+def test_ring_cheaper_than_parameter_server(n_mb, p):
+    n = n_mb * MB
+    bw, a = cal.PAPER_HW.net_bw, cal.PAPER_HW.alpha
+    assert costs.ring_all_reduce(n, p, bw, a) <= \
+        costs.parameter_server(n, p, bw, a) + 2 * a * p
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_mb=st.floats(1, 500), p1=st.integers(2, 60),
+       extra=st.integers(1, 60))
+def test_allgather_monotone_in_p(n_mb, p1, extra):
+    n = n_mb * MB
+    bw, a = cal.PAPER_HW.net_bw, cal.PAPER_HW.alpha
+    assert costs.all_gather(n, p1 + extra, bw, a) >= \
+        costs.all_gather(n, p1, bw, a)
+
+
+@settings(max_examples=25, deadline=None)
+@given(model_mb=st.floats(50, 600), t_comp_ms=st.floats(20, 800),
+       p=st.integers(4, 128))
+def test_compression_always_wins_at_zero_bandwidth_limit(model_mb,
+                                                         t_comp_ms, p):
+    """As BW -> small, any scheme with a smaller payload must win."""
+    w = pm.Workload("w", model_mb * MB, t_comp_ms / 1e3)
+    hw = cal.PAPER_HW.with_net(0.25)
+    spec = pm.CompressionSpec("c", t_encode_decode=0.001,
+                              payload_bytes=(w.model_bytes / 100,),
+                              all_reduce_compatible=True)
+    assert pm.compressed_time(w, p, hw, spec) < pm.sync_sgd_time(w, p, hw)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ratio=st.floats(1.1, 64))
+def test_required_compression_is_sufficient(ratio):
+    """bucket_compressed_time at the returned ratio meets the target."""
+    w = cal.RESNET101
+    hw = cal.PAPER_HW
+    r = pm.required_compression(w, 64, hw)
+    if np.isfinite(r):
+        t = pm.bucket_compressed_time(w, 64, hw, r * 1.01)
+        assert t <= 1.2 * pm.GAMMA_DEFAULT * w.t_comp * 1.001
+
+
+# ---------------------------------------------------------------- int8 gather
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(2, 64), cols=st.integers(2, 64),
+       seed=st.integers(0, 2 ** 30))
+def test_quantized_gather_error_bound_and_exact_backward(rows, cols, seed):
+    """Forward error ≤ one quantization step per element; backward is the
+    exact reduce-scatter (single-axis mesh of size 1 degenerates to
+    round-trip quantization)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.layers import _mk_quantized_gather
+
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    w = jax.random.normal(jax.random.key(seed), (rows, cols))
+
+    f = _mk_quantized_gather(("data",), 0)
+    g = jax.shard_map(f, mesh=mesh, in_specs=(P(None, None),),
+                      out_specs=P(None, None), check_vma=False)
+    out = g(w)
+    step = float(jnp.max(jnp.abs(w))) / 127.0
+    assert float(jnp.max(jnp.abs(out - w))) <= step / 2 + 1e-6
+
+    # backward: cotangent passes through exactly (p=1 scatter = identity)
+    def loss(x):
+        return jnp.sum(f(x) * 2.0)
+
+    grads = jax.shard_map(jax.grad(loss), mesh=mesh,
+                          in_specs=(P(None, None),),
+                          out_specs=P(None, None), check_vma=False)(w)
+    np.testing.assert_allclose(np.asarray(grads), 2.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- hloparse
+def test_hloparse_flops_conserved_under_scan_nesting():
+    """Nested scans multiply: outer(3) × inner(4) × one dot == 12 dots."""
+    from repro.core.perfmodel.hloparse import analyze_hlo
+
+    def f(w, x):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, ()
+            c, _ = jax.lax.scan(inner, c, wo)
+            return c, ()
+        out, _ = jax.lax.scan(outer, x, w)
+        return out
+
+    w = jax.ShapeDtypeStruct((3, 4, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    comp = jax.jit(f).lower(w, x).compile()
+    parsed = analyze_hlo(comp.as_text())
+    assert parsed.flops == 3 * 4 * 2 * 8 * 32 * 32, parsed.flops
