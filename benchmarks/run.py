@@ -42,6 +42,7 @@ def main() -> None:
     print("=" * 72)
     for r in encode_decode.measure():
         print(f"encdec_{r['method']},{r['us_per_call']},"
+              f"enc={r['t_encode_us']}us,dec={r['t_decode_us']}us,"
               f"ratio={r['ratio']}x")
 
     print("\n" + "=" * 72)

@@ -62,6 +62,21 @@ class GradAggregator:
     def init_shard_state(self, n_shard_elems: int, key: jax.Array):
         return self.compressor.init_state(n_shard_elems, key)
 
+    # ---------- reduce phase ----------
+    def reduce(self, payload: cbase.Payload,
+               axes: Optional[Sequence[str]] = None) -> cbase.Payload:
+        """Move one payload across the mesh: the public entry point to the
+        shared ``reduce_payload`` helper (the same function every
+        compressor's ``encode_and_reduce`` goes through), defaulting to the
+        configured compress axes.  The collective is selected from the
+        payload's wire spec: associative payloads all-reduce (pmean,
+        constant in p); the rest all-gather (linear in p).  Use this when
+        composing the phases manually (benchmarks, plugins); the training
+        paths below compose via ``Compressor.encode_and_reduce`` so
+        multi-round schemes keep their structure."""
+        axes = tuple(axes if axes is not None else self.cfg.compress_axes)
+        return cbase.reduce_payload(payload, axes)
+
     # ---------- DDP path ----------
     def aggregate_bucketed(self, grads, states, layout):
         """grads: local gradient pytree (replicated params).  Returns the
@@ -70,13 +85,15 @@ class GradAggregator:
         new_states = []
         out_buckets = []
         for i, b in enumerate(buckets):
-            b, st = self._aggregate_one(b, states[i])
+            b, st = self.aggregate_one(b, states[i])
             out_buckets.append(b)
             new_states.append(st)
         out = bucketing.from_buckets(out_buckets, grads, layout)
         return out, tuple(new_states)
 
-    def _aggregate_one(self, bucket: jax.Array, state: Any):
+    def aggregate_one(self, bucket: jax.Array, state: Any):
+        """One bucket through the three-phase pipeline:
+        encode -> reduce (collective picked from the payload) -> decode."""
         raw, comp = tuple(self.cfg.raw_axes), tuple(self.cfg.compress_axes)
         if self.cfg.compressor == "none":
             return jax.lax.pmean(bucket, raw + comp), state
@@ -84,7 +101,8 @@ class GradAggregator:
             # hierarchical: raw mean over ICI first (cheap), compress the
             # pod-axis reduction only
             bucket = jax.lax.pmean(bucket, raw)
-        return self.compressor.aggregate(bucket, state, comp)
+        payload = self.compressor.encode_and_reduce(bucket, state, comp)
+        return self.compressor.decode(payload, bucket, state)
 
     # ---------- FSDP path ----------
     def aggregate_shard(self, shard: jax.Array, state: Any):
@@ -93,20 +111,15 @@ class GradAggregator:
         comp = tuple(self.cfg.compress_axes)
         if self.cfg.compressor == "none":
             return jax.lax.pmean(shard, comp), state
-        return self.compressor.aggregate(shard, state, comp)
+        payload = self.compressor.encode_and_reduce(shard, state, comp)
+        return self.compressor.decode(payload, shard, state)
 
 
 def from_plan(plan, multi_pod: bool) -> AggregatorConfig:
-    """Translate an ArchConfig.plan into the aggregation policy."""
-    kw: dict = {}
-    if plan.compression == "powersgd":
-        kw = dict(rank=plan.powersgd_rank)
-    elif plan.compression == "mstopk":
-        kw = dict(frac=plan.topk_frac, error_feedback=plan.error_feedback)
-    elif plan.compression == "qsgd":
-        kw = dict(bits=plan.qsgd_bits, error_feedback=plan.error_feedback)
-    elif plan.compression in ("signsgd", "randomk", "terngrad"):
-        kw = dict(error_feedback=plan.error_feedback)
+    """Translate an ArchConfig.plan into the aggregation policy.  The
+    compressor kwargs come from the registry's declarative spec — the one
+    plan -> kwargs mapping in the codebase."""
+    kw = cbase.plan_kwargs(plan)
     if plan.compress_axes == "all":
         compress_axes: tuple[str, ...] = (("pod", "data") if multi_pod
                                           else ("data",))

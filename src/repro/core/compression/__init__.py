@@ -1,1 +1,3 @@
-from repro.core.compression.base import Compressor, from_plan, make  # noqa: F401
+from repro.core.compression.base import (  # noqa: F401
+    Compressor, CompressorSpec, Payload, from_plan, make, plan_kwargs,
+    reduce_payload, register_compressor, registry)

@@ -1,26 +1,54 @@
-"""Compressor API.
+"""Compressor API: ``encode -> Payload -> reduce -> decode``.
 
-A compressor owns one stage of the gradient-aggregation path:
+A compressor owns the *math* of one gradient-aggregation stage; the
+collective that moves its payload is owned by the aggregator.  The contract
+mirrors the paper's per-phase decomposition (T_encode / T_comm / T_decode,
+Table 2 / §4) so each phase can be timed and costed separately:
 
-    aggregate(bucket, state, axes) -> (mean_bucket, new_state)
+    encode(bucket, state, rank) -> Payload
+        Purely local, collective-free: turn the 1-D gradient bucket (plus
+        carried state: error feedback, warm starts, rng) into the exact
+        tensors that will cross the wire.  ``rank`` is the device's index
+        along the reduction axes — used only for per-device randomness
+        (stochastic rounding seeds); ``None`` means "rank 0 / single
+        device".
 
-``bucket`` is the local 1-D gradient (or gradient-shard) vector; ``axes`` are
-the mesh axis names to average over.  The call happens *inside* ``shard_map``,
-so implementations use ``jax.lax`` collectives directly — this is the JAX
-analogue of a PyTorch DDP communication hook (paper §3.1).
+    reduce(payload, axes) -> Payload        [``reduce_payload`` — the shared
+        helper ``GradAggregator.reduce`` delegates to]
+        The only phase that touches the network.  Associative payloads are
+        all-reduced (``pmean`` — wire cost constant in p, paper Table 3);
+        non-associative payloads are all-gathered (cost linear in p, the
+        paper's Fig. 7 scaling failure).  The choice is read off
+        ``payload.associative`` — compressors never pick collectives.
 
-Each compressor also carries its analytical cost hooks so the performance
-model (paper §4 / App. B) can reason about it without running it:
-``compressed_bytes`` (wire bytes per device per aggregation) and
-``encode_decode_flops`` (paper's T_encode-decode, up to a hardware constant).
+    decode(payload, bucket, state) -> (mean_bucket, new_state)
+        Purely local, collective-free: reconstruct the mean gradient from
+        the reduced payload.  ``payload.local`` carries this device's
+        pre-reduce tensors so error feedback can subtract its own
+        contribution without re-encoding.
 
-``all_reduce_compatible`` mirrors the paper's Table 3: associative schemes
-aggregate with all-reduce-style cost (constant in p); the rest degrade to
-all-gather (linear in p).
+``aggregate`` is the composition of the three phases and is what the train
+step calls.  Multi-round schemes override ``encode_and_reduce`` — PowerSGD
+runs encode₁ -> reduce -> orthonormalize -> encode₂ -> reduce and hands the
+combined factors to ``decode`` — while still exposing one ``Payload`` per
+collective round (``wire_rounds``).
+
+The wire format is self-describing: ``Payload.nbytes`` / ``wire_spec()``
+are derived from the actual arrays, and ``Compressor.compressed_bytes`` is
+computed by abstract-evaluating the encode path — the performance model can
+no longer drift from what actually goes on the wire.
+
+Compressors register with ``@register_compressor(name, **plan_fields)``.
+The registry is the single source of ParallelPlan -> constructor-kwargs
+plumbing (``plan_kwargs``) and lets third-party plugins add schemes without
+editing core files.  See docs/compression_api.md.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,60 +61,222 @@ def axis_size(axes: AxisNames) -> jax.Array:
     return jax.lax.psum(1, tuple(axes))
 
 
+def mean_over(x: jax.Array, axes: AxisNames) -> jax.Array:
+    return jax.lax.pmean(x, tuple(axes))
+
+
+# --------------------------------------------------------------------------
+# Payload: the self-describing wire format
+# --------------------------------------------------------------------------
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("tensors", "local"),
+                   meta_fields=("associative", "reduced"))
+@dataclasses.dataclass
+class Payload:
+    """One collective round's wire content.
+
+    ``tensors``      name -> array pytree; these exact arrays cross the wire
+                     (before ``reduce``) or came back from it (after).
+    ``associative``  static flag: True -> the reduction is a mean of these
+                     tensors (all-reduce, constant in p); False -> every
+                     worker needs every worker's tensors (all-gather, linear
+                     in p).  Non-associative tensors come back with a
+                     leading peer axis of size p.
+    ``reduced``      static flag set by ``reduce_payload``.
+    ``local``        after ``reduce``: this device's pre-reduce ``tensors``
+                     (NOT wire content — kept so ``decode`` can subtract the
+                     device's own contribution for error feedback).
+    """
+    tensors: dict
+    associative: bool = True
+    reduced: bool = False
+    local: Any = None
+
+    @property
+    def nbytes(self) -> int:
+        """Per-peer wire bytes of this round (meaningful pre-reduce)."""
+        return int(sum(math.prod(t.shape) * jnp.dtype(t.dtype).itemsize
+                       for t in jax.tree.leaves(self.tensors)))
+
+    def wire_spec(self) -> dict:
+        """{tensor path: {shape, dtype, nbytes}} — the declared wire format."""
+        out = {}
+        flat, _ = jax.tree_util.tree_flatten_with_path(self.tensors)
+        for path, t in flat:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            out[key] = dict(shape=tuple(t.shape), dtype=str(jnp.dtype(t.dtype)),
+                            nbytes=int(math.prod(t.shape)
+                                       * jnp.dtype(t.dtype).itemsize))
+        return out
+
+
+def reduce_payload(payload: Payload, axes: AxisNames) -> Payload:
+    """The reduce phase: THE single place a compression payload meets a
+    collective.  Picks the collective from ``payload.associative``:
+
+      * associative     -> ``pmean`` each tensor (all-reduce-style cost,
+                           constant in p);
+      * non-associative -> ``all_gather`` each tensor, normalized to a
+                           leading peer axis ``(p, *local_shape)``.
+    """
+    axes = tuple(axes)
+    if payload.associative:
+        tensors = jax.tree.map(lambda t: jax.lax.pmean(t, axes),
+                               payload.tensors)
+    else:
+        def gather(t):
+            g = jax.lax.all_gather(t, axes)
+            return g.reshape((-1,) + t.shape)
+        tensors = jax.tree.map(gather, payload.tensors)
+    return dataclasses.replace(payload, tensors=tensors,
+                               local=payload.tensors, reduced=True)
+
+
+# --------------------------------------------------------------------------
+# the three-phase contract
+# --------------------------------------------------------------------------
 class Compressor:
     name: str = "abstract"
-    all_reduce_compatible: bool = True
+    #: True -> payloads reduce with a mean (all-reduce); paper Table 3.
+    associative: bool = True
+
+    @property
+    def all_reduce_compatible(self) -> bool:
+        """Back-compat alias for ``associative`` (paper Table 3 wording)."""
+        return self.associative
 
     def init_state(self, n: int, key: jax.Array) -> Any:
         """Per-bucket persistent state (error feedback, warm-start, rng)."""
         return ()
 
-    def aggregate(self, bucket: jax.Array, state: Any, axes: AxisNames):
+    def _compensated(self, bucket: jax.Array, state: Any) -> jax.Array:
+        """Error-compensated fp32 gradient: g + the carried residual (for
+        schemes with an ``error_feedback`` switch and a ``state.err``)."""
+        g = bucket.astype(jnp.float32)
+        return g + state.err if getattr(self, "error_feedback", False) else g
+
+    # ---- phase 1: local, collective-free --------------------------------
+    def encode(self, bucket: jax.Array, state: Any,
+               rank: Optional[jax.Array] = None) -> Payload:
         raise NotImplementedError
 
-    # ---- perf-model hooks (bytes / flops are per device, per step) ----
-    def compressed_bytes(self, n: int, itemsize: int = 4) -> float:
-        """Wire payload per aggregation (one direction)."""
-        return n * itemsize
+    # ---- phase 2: the only phase that touches the network ---------------
+    def encode_and_reduce(self, bucket: jax.Array, state: Any,
+                          axes: AxisNames) -> Payload:
+        """encode + reduce; multi-round schemes (PowerSGD) override this to
+        run several encode->reduce rounds before decode."""
+        rank = jax.lax.axis_index(tuple(axes))
+        return reduce_payload(self.encode(bucket, state, rank=rank), axes)
 
-    def encode_decode_flops(self, n: int) -> float:
-        return 0.0
+    # ---- phase 3: local, collective-free --------------------------------
+    def decode(self, payload: Payload, bucket: jax.Array, state: Any):
+        """Reduced payload -> (mean_bucket, new_state)."""
+        raise NotImplementedError
+
+    # ---- composition (what the train step calls) ------------------------
+    def aggregate(self, bucket: jax.Array, state: Any, axes: AxisNames):
+        payload = self.encode_and_reduce(bucket, state, axes)
+        return self.decode(payload, bucket, state)
+
+    # ---- wire accounting: DERIVED from the payloads, never hand-written --
+    def wire_rounds(self, bucket: jax.Array, state: Any) -> list[Payload]:
+        """One Payload per collective round, shape-faithful and collective-
+        free (safe under ``jax.eval_shape``).  Default: single round =
+        ``encode``."""
+        return [self.encode(bucket, state)]
+
+    def wire_round_bytes(self, n: int, itemsize: int = 4) -> tuple[int, ...]:
+        """Per-round wire bytes (per peer), abstract-evaluated from the
+        actual encode path."""
+        cache = getattr(self, "_wire_cache", None)
+        if cache is None:
+            cache = self._wire_cache = {}
+        if (n, itemsize) not in cache:
+            dtype = {2: jnp.bfloat16, 4: jnp.float32,
+                     8: jnp.float64}.get(itemsize, jnp.float32)
+
+            def f(key):
+                bucket = jnp.zeros((n,), dtype)
+                return [p.tensors for p in
+                        self.wire_rounds(bucket, self.init_state(n, key))]
+
+            rounds = jax.eval_shape(f, jax.random.key(0))
+            cache[(n, itemsize)] = tuple(
+                int(sum(math.prod(t.shape) * jnp.dtype(t.dtype).itemsize
+                        for t in jax.tree.leaves(r))) for r in rounds)
+        return cache[(n, itemsize)]
+
+    def compressed_bytes(self, n: int, itemsize: int = 4) -> float:
+        """Wire payload per aggregation (one direction, per peer) — the sum
+        of every round's payload ``nbytes``."""
+        return float(sum(self.wire_round_bytes(n, itemsize)))
 
     def compression_ratio(self, n: int, itemsize: int = 4) -> float:
         return (n * itemsize) / max(self.compressed_bytes(n, itemsize), 1e-9)
 
+    # ---- analytical flops (paper T_encode-decode, up to a hw constant) ---
+    def encode_decode_flops(self, n: int) -> float:
+        return 0.0
 
-def mean_over(x: jax.Array, axes: AxisNames) -> jax.Array:
-    return jax.lax.pmean(x, tuple(axes))
+
+# --------------------------------------------------------------------------
+# registry: the single plan -> compressor-kwargs mapping
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CompressorSpec:
+    """Registry entry: class + the declarative ParallelPlan field mapping
+    (constructor kwarg -> plan attribute name)."""
+    name: str
+    cls: type
+    plan_fields: tuple[tuple[str, str], ...] = ()
+
+
+_REGISTRY: dict[str, CompressorSpec] = {}
+
+
+def register_compressor(name: str, **plan_fields: str) -> Callable[[type],
+                                                                   type]:
+    """Class decorator: ``@register_compressor("qsgd", bits="qsgd_bits",
+    error_feedback="error_feedback")``.  ``plan_fields`` maps constructor
+    kwargs to ``ParallelPlan`` attributes — the ONLY such mapping in the
+    codebase (``plan_kwargs`` reads it)."""
+    def deco(cls: type) -> type:
+        _REGISTRY[name] = CompressorSpec(name, cls, tuple(plan_fields.items()))
+        cls.registry_name = name
+        return cls
+    return deco
+
+
+def _load_builtins() -> None:
+    from repro.core.compression import (mstopk, none, powersgd,  # noqa: F401
+                                        qsgd, randomk, signsgd, terngrad)
+
+
+def registry() -> dict[str, CompressorSpec]:
+    _load_builtins()
+    return dict(_REGISTRY)
 
 
 def make(name: str, **kw) -> Compressor:
     """Factory: ``make('powersgd', rank=4)`` etc."""
-    from repro.core.compression import (mstopk, none, powersgd, qsgd, randomk,
-                                        signsgd, terngrad)
-    table = {
-        "none": none.NoCompression,
-        "powersgd": powersgd.PowerSGD,
-        "signsgd": signsgd.SignSGDMajorityVote,
-        "mstopk": mstopk.MSTopK,
-        "randomk": randomk.RandomK,
-        "qsgd": qsgd.QSGD,
-        "terngrad": terngrad.TernGrad,
-    }
-    if name not in table:
-        raise KeyError(f"unknown compressor {name!r}; have {sorted(table)}")
-    return table[name](**kw)
+    _load_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name].cls(**kw)
+
+
+def plan_kwargs(plan) -> dict:
+    """Constructor kwargs for ``plan.compression``, read off the registered
+    spec's declarative field mapping."""
+    _load_builtins()
+    if plan.compression not in _REGISTRY:
+        raise KeyError(f"unknown compressor {plan.compression!r}; "
+                       f"have {sorted(_REGISTRY)}")
+    spec = _REGISTRY[plan.compression]
+    return {kwarg: getattr(plan, field) for kwarg, field in spec.plan_fields}
 
 
 def from_plan(plan) -> Compressor:
     """Build the compressor described by a ``ParallelPlan``."""
-    kw: dict = {}
-    if plan.compression == "powersgd":
-        kw = dict(rank=plan.powersgd_rank)
-    elif plan.compression == "mstopk":
-        kw = dict(frac=plan.topk_frac, error_feedback=plan.error_feedback)
-    elif plan.compression == "qsgd":
-        kw = dict(bits=plan.qsgd_bits, error_feedback=plan.error_feedback)
-    elif plan.compression in ("signsgd", "randomk", "terngrad"):
-        kw = dict(error_feedback=plan.error_feedback)
-    return make(plan.compression, **kw)
+    return make(plan.compression, **plan_kwargs(plan))

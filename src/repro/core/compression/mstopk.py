@@ -1,30 +1,33 @@
 """MSTop-K (Shi et al., 2021) — magnitude top-k sparsification.
 
-NOT all-reduce compatible (paper Table 3): the union of per-worker index sets
-differs across workers, so aggregation all-gathers (values, indices) pairs and
-scatter-adds locally.  Buffer memory grows linearly with p — the exact OOM
-failure mode the paper hits at 32/16 GPUs (Fig. 6); our perf model carries the
-same term.
+NOT associative (paper Table 3): the union of per-worker index sets differs
+across workers, so the payload ((values, indices) pairs) all-gathers and
+each worker scatter-adds locally.  Buffer memory grows linearly with p —
+the exact OOM failure mode the paper hits at 32/16 GPUs (Fig. 6); our perf
+model carries the same term.
 
 Selection on TPU uses a sampled-threshold estimate + mask (see
 ``kernels/topk.py``); the CPU reference path is exact ``lax.top_k``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression.base import AxisNames, Compressor
+from repro.core.compression.base import (Compressor, Payload,
+                                         register_compressor)
 
 
 class TopKState(NamedTuple):
     err: jax.Array
 
 
+@register_compressor("mstopk", frac="topk_frac",
+                     error_feedback="error_feedback")
 class MSTopK(Compressor):
-    all_reduce_compatible = False
+    associative = False
 
     def __init__(self, frac: float = 0.01, error_feedback: bool = True):
         assert 0 < frac <= 1
@@ -39,29 +42,29 @@ class MSTopK(Compressor):
         return TopKState(err=jnp.zeros((n,) if self.error_feedback else (1,),
                                        jnp.float32))
 
-    def aggregate(self, bucket: jax.Array, state: TopKState, axes: AxisNames):
+
+    def encode(self, bucket: jax.Array, state: TopKState,
+               rank: Optional[jax.Array] = None) -> Payload:
         from repro.kernels import ops as kops
+        g = self._compensated(bucket, state)
+        vals, idx = kops.topk_select(g, self.k_for(bucket.shape[0]))
+        return Payload({"vals": vals, "idx": idx}, associative=False)
+
+    def decode(self, payload: Payload, bucket: jax.Array, state: TopKState):
         n = bucket.shape[0]
-        k = self.k_for(n)
-        g = bucket.astype(jnp.float32)
-        if self.error_feedback:
-            g = g + state.err
-        vals, idx = kops.topk_select(g, k)          # local top-k by |.|
-        gv = jax.lax.all_gather(vals, tuple(axes)).reshape(-1)
-        gi = jax.lax.all_gather(idx, tuple(axes)).reshape(-1)
-        p = gv.shape[0] // k
+        gv = payload.tensors["vals"].reshape(-1)      # (p·k,)
+        gi = payload.tensors["idx"].reshape(-1)
+        p = payload.tensors["vals"].shape[0]
         dense = jnp.zeros((n,), jnp.float32).at[gi].add(gv)
         out = dense / p
         if self.error_feedback:
-            own = jnp.zeros((n,), jnp.float32).at[idx].set(vals)
+            g = self._compensated(bucket, state)
+            own = jnp.zeros((n,), jnp.float32).at[payload.local["idx"]].set(
+                payload.local["vals"])
             new_err = g - own
         else:
             new_err = state.err
         return out.astype(bucket.dtype), TopKState(err=new_err)
-
-    # ---- perf-model hooks ----
-    def compressed_bytes(self, n, itemsize=4):
-        return self.k_for(n) * 8  # fp32 value + int32 index, per peer
 
     def encode_decode_flops(self, n):
         import math

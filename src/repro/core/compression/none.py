@@ -1,21 +1,24 @@
 """syncSGD baseline: raw (uncompressed) all-reduce mean — the paper's winner
-in the data-center regime."""
+in the data-center regime.  encode is the identity; the payload IS the
+bucket, so the derived wire bytes are exactly ``n * itemsize``."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
-from repro.core.compression.base import AxisNames, Compressor
+from repro.core.compression.base import (Compressor, Payload,
+                                         register_compressor)
 
 
+@register_compressor("none")
 class NoCompression(Compressor):
     name = "none"
-    all_reduce_compatible = True
+    associative = True
 
-    def aggregate(self, bucket, state, axes: AxisNames):
-        return jax.lax.pmean(bucket, tuple(axes)), state
+    def encode(self, bucket: jax.Array, state,
+               rank: Optional[jax.Array] = None) -> Payload:
+        return Payload({"bucket": bucket}, associative=True)
 
-    def compressed_bytes(self, n, itemsize=4):
-        return n * itemsize
-
-    def encode_decode_flops(self, n):
-        return 0.0
+    def decode(self, payload: Payload, bucket: jax.Array, state):
+        return payload.tensors["bucket"].astype(bucket.dtype), state

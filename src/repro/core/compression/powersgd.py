@@ -1,16 +1,23 @@
 """PowerSGD (Vogels et al., 2019) — rank-r gradient compression.
 
-All-reduce compatible (paper Table 3): both collectives are means of linear
+Associative (paper Table 3): both collective rounds are means of linear
 functions of the local matrix, so aggregation cost is constant in p.
 
 Per bucket of n elements, reshaped to an (rows × cols) matrix M:
 
     M   = grad + error                      (error feedback, built in)
-    P   = mean_p(M_i @ Q)                   <- all-reduce #1, rows×r
+    P   = mean_p(M_i @ Q)                   <- reduce round 1, rows×r
     P̂   = orthonormalize(P)                 (modified Gram-Schmidt)
-    Q'  = mean_p(M_iᵀ @ P̂)                  <- all-reduce #2, cols×r
+    Q'  = mean_p(M_iᵀ @ P̂)                  <- reduce round 2, cols×r
     M̂   = P̂ @ Q'ᵀ                           (identical on every device)
     err = M - M̂                             (persisted; Q' warm-starts next step)
+
+In the three-phase API this is the canonical multi-round scheme:
+``encode`` emits the round-1 payload {P}; ``encode_and_reduce`` is
+overridden to run both reduce rounds (with the orthonormalization between
+them) and hand ``decode`` a combined {P̂, Q'} payload; ``wire_rounds``
+exposes one payload per round so the derived wire bytes are
+(rows + cols) · r · 4.
 
 The encode/decode matmuls are the compute hot spot the paper measures as
 T_encode-decode (Table 2); the fused TPU kernel lives in
@@ -19,19 +26,22 @@ TPU (pure-jnp reference on CPU).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression.base import AxisNames, Compressor
+from repro.core.compression.base import (AxisNames, Compressor, Payload,
+                                         reduce_payload, register_compressor)
 
 
 def matrix_shape(n: int, min_cols: int = 128) -> tuple[int, int]:
-    """Near-square (rows, cols) with cols a multiple of the TPU lane width."""
+    """Near-square (rows, cols) with cols a multiple of the TPU lane width;
+    tiny buckets (n < min_cols) collapse to a single row of n columns."""
     cols = int(n ** 0.5)
     cols = max(min_cols, -(-cols // min_cols) * min_cols)
-    cols = min(cols, -(-n // 1))  # never exceed n grossly for tiny buckets
+    cols = min(cols, n)
     rows = -(-n // cols)
     return rows, cols
 
@@ -52,8 +62,9 @@ class PowerSGDState(NamedTuple):
     err: jax.Array    # (n,) error-feedback memory
 
 
+@register_compressor("powersgd", rank="powersgd_rank")
 class PowerSGD(Compressor):
-    all_reduce_compatible = True
+    associative = True
 
     def __init__(self, rank: int = 4, min_cols: int = 128):
         self.rank = rank
@@ -66,30 +77,58 @@ class PowerSGD(Compressor):
         q = jax.random.normal(key, (cols, self.rank), dtype=jnp.float32)
         return PowerSGDState(q=q, err=jnp.zeros((n,), jnp.float32))
 
-    def aggregate(self, bucket: jax.Array, state: PowerSGDState,
-                  axes: AxisNames):
-        from repro.kernels import ops as kops
+    def _matrix(self, bucket: jax.Array, state: PowerSGDState):
+        """(M, M_flat): the error-compensated bucket as a padded matrix."""
         n = bucket.shape[0]
         rows, cols = matrix_shape(n, self.min_cols)
-        compute_dtype = jnp.float32
-        m_flat = bucket.astype(compute_dtype) + state.err
-        m = jnp.pad(m_flat, (0, rows * cols - n)).reshape(rows, cols)
+        m_flat = bucket.astype(jnp.float32) + state.err
+        return jnp.pad(m_flat, (0, rows * cols - n)).reshape(rows, cols), \
+            m_flat
 
-        p = kops.powersgd_encode(m, state.q)              # M @ Q
-        p = jax.lax.pmean(p, tuple(axes))
-        p = orthonormalize(p)
-        q_new = kops.powersgd_encode(m.T, p)              # Mᵀ @ P̂
-        q_new = jax.lax.pmean(q_new, tuple(axes))
-        m_hat = kops.powersgd_decode(p, q_new)            # P̂ @ Q'ᵀ
-        m_hat_flat = m_hat.reshape(-1)[:n]
+    # ---- phase 1: round-1 payload P = M @ Q -----------------------------
+    def encode(self, bucket: jax.Array, state: PowerSGDState,
+               rank: Optional[jax.Array] = None) -> Payload:
+        from repro.kernels import ops as kops
+        m, _ = self._matrix(bucket, state)
+        return Payload({"p": kops.powersgd_encode(m, state.q)},
+                       associative=True)
+
+    # ---- phase 2: two reduce rounds with Gram-Schmidt in between --------
+    def encode_and_reduce(self, bucket: jax.Array, state: PowerSGDState,
+                          axes: AxisNames) -> Payload:
+        from repro.kernels import ops as kops
+        red1 = reduce_payload(self.encode(bucket, state), axes)
+        p_hat = orthonormalize(red1.tensors["p"])
+        m, _ = self._matrix(bucket, state)
+        red2 = reduce_payload(
+            Payload({"q": kops.powersgd_encode(m.T, p_hat)},
+                    associative=True), axes)
+        return dataclasses.replace(
+            red2, tensors={"p": p_hat, "q": red2.tensors["q"]})
+
+    # ---- phase 3: M̂ = P̂ @ Q'ᵀ + error update ---------------------------
+    def decode(self, payload: Payload, bucket: jax.Array,
+               state: PowerSGDState):
+        from repro.kernels import ops as kops
+        n = bucket.shape[0]
+        p_hat, q_new = payload.tensors["p"], payload.tensors["q"]
+        _, m_flat = self._matrix(bucket, state)
+        m_hat_flat = kops.powersgd_decode(p_hat, q_new).reshape(-1)[:n]
         err = m_flat - m_hat_flat
-        out = m_hat_flat.astype(bucket.dtype)
-        return out, PowerSGDState(q=q_new, err=err)
+        return m_hat_flat.astype(bucket.dtype), \
+            PowerSGDState(q=q_new, err=err)
 
-    # ---- perf-model hooks ----
-    def compressed_bytes(self, n, itemsize=4):
-        rows, cols = matrix_shape(n, self.min_cols)
-        return (rows + cols) * self.rank * 4  # fp32 factors on the wire
+    # ---- wire accounting: one payload per reduce round ------------------
+    def wire_rounds(self, bucket: jax.Array,
+                    state: PowerSGDState) -> list[Payload]:
+        from repro.kernels import ops as kops
+        round1 = self.encode(bucket, state)
+        m, _ = self._matrix(bucket, state)
+        # orthonormalize preserves shape, so P stands in for P̂ here
+        round2 = Payload(
+            {"q": kops.powersgd_encode(m.T, round1.tensors["p"])},
+            associative=True)
+        return [round1, round2]
 
     def encode_decode_flops(self, n):
         rows, cols = matrix_shape(n, self.min_cols)

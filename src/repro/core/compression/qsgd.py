@@ -1,19 +1,23 @@
 """QSGD (Alistarh et al., 2017) — stochastic uniform quantization.
 
-NOT all-reduce compatible (paper Table 3): re-quantization after summation is
-lossy and NCCL-style reducers don't support the custom dtype, so aggregation
-all-gathers int levels + per-bucket norms and dequantizes locally.
+NOT associative (paper Table 3): re-quantization after summation is lossy
+and NCCL-style reducers don't support the custom dtype, so the payload
+(int8 levels + per-bucket norm) all-gathers and each worker dequantizes
+locally.  Unbiased: E[decode(encode(g))] = g (property-tested).
 
-Unbiased: E[decode(encode(g))] = g (property-tested).
+The derived wire bytes are truthful about the implementation: levels ride
+the wire as int8 regardless of ``bits`` (no sub-byte packing), plus the
+fp32 norm scalar.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression.base import AxisNames, Compressor
+from repro.core.compression.base import (Compressor, Payload,
+                                         register_compressor)
 
 
 class QSGDState(NamedTuple):
@@ -21,8 +25,10 @@ class QSGDState(NamedTuple):
     err: jax.Array
 
 
+@register_compressor("qsgd", bits="qsgd_bits",
+                     error_feedback="error_feedback")
 class QSGD(Compressor):
-    all_reduce_compatible = False
+    associative = False
 
     def __init__(self, bits: int = 8, error_feedback: bool = False):
         assert 2 <= bits <= 8
@@ -36,36 +42,36 @@ class QSGD(Compressor):
             key=key,
             err=jnp.zeros((n,) if self.error_feedback else (1,), jnp.float32))
 
-    def _encode(self, g: jax.Array, key: jax.Array):
-        from repro.kernels import ops as kops
-        norm = jnp.linalg.norm(g) + 1e-12
-        q = kops.qsgd_quantize(g, norm, self.levels, key)  # int8 levels
-        return q, norm
 
-    def _decode(self, q: jax.Array, norm: jax.Array):
+    def encode(self, bucket: jax.Array, state: QSGDState,
+               rank: Optional[jax.Array] = None) -> Payload:
+        from repro.kernels import ops as kops
+        _, sub = jax.random.split(state.key)
+        if rank is not None:
+            # distinct stochastic rounding per device
+            sub = jax.random.fold_in(sub, rank)
+        g = self._compensated(bucket, state)
+        norm = jnp.linalg.norm(g) + 1e-12
+        q = kops.qsgd_quantize(g, norm, self.levels, sub)  # int8 levels
+        return Payload({"q": q, "norm": norm}, associative=False)
+
+    def _dequantize(self, q: jax.Array, norm: jax.Array):
         return q.astype(jnp.float32) * (norm / self.levels)
 
-    def aggregate(self, bucket: jax.Array, state: QSGDState, axes: AxisNames):
-        key, sub = jax.random.split(state.key)
-        # distinct stochastic rounding per device
-        sub = jax.random.fold_in(sub, jax.lax.axis_index(tuple(axes)))
-        g = bucket.astype(jnp.float32)
-        if self.error_feedback:
-            g = g + state.err
-        q, norm = self._encode(g, sub)
-        gq = jax.lax.all_gather(q, tuple(axes))          # (p, n) int8
-        gn = jax.lax.all_gather(norm, tuple(axes))       # (p,)
+    def decode(self, payload: Payload, bucket: jax.Array, state: QSGDState):
+        gq = payload.tensors["q"]                     # (p, n) int8
+        gn = payload.tensors["norm"]                  # (p,)
         p = gq.shape[0]
         out = jnp.einsum("pn,p->n", gq.astype(jnp.float32),
                          gn / self.levels) / p
+        key, _ = jax.random.split(state.key)
         if self.error_feedback:
-            new_err = g - self._decode(q, norm)
+            g = self._compensated(bucket, state)
+            new_err = g - self._dequantize(payload.local["q"],
+                                           payload.local["norm"])
         else:
             new_err = state.err
         return out.astype(bucket.dtype), QSGDState(key=key, err=new_err)
-
-    def compressed_bytes(self, n, itemsize=4):
-        return n * self.bits / 8 + 4  # levels + norm, per peer
 
     def encode_decode_flops(self, n):
         return 6.0 * n

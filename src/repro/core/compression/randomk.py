@@ -1,20 +1,23 @@
 """Random-k sparsification (Wangni et al., 2018).
 
-All-reduce compatible (paper Table 3): every worker selects the SAME k random
-coordinates (shared seed folded with the step counter), so the sparse
-aggregate is a plain psum over a dense length-k vector — cost constant in p.
+Associative (paper Table 3): every worker selects the SAME k random
+coordinates (shared seed in the carried state), so the payload is a dense
+length-k value vector that reduces with a plain mean — cost constant in p.
+The indices never cross the wire: ``decode`` re-derives them from the same
+state key, so the derived wire bytes are exactly 4·k.
 
-``rescale=True`` gives the unbiased estimator (×n/k); with error feedback the
-common practice is no rescale (the residual re-injects the mass).
+``rescale=True`` gives the unbiased estimator (×n/k); with error feedback
+the common practice is no rescale (the residual re-injects the mass).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression.base import AxisNames, Compressor
+from repro.core.compression.base import (Compressor, Payload,
+                                         register_compressor)
 
 
 class RandomKState(NamedTuple):
@@ -22,8 +25,9 @@ class RandomKState(NamedTuple):
     err: jax.Array
 
 
+@register_compressor("randomk", error_feedback="error_feedback")
 class RandomK(Compressor):
-    all_reduce_compatible = True
+    associative = True
 
     def __init__(self, frac: float = 0.01, rescale: bool = False,
                  error_feedback: bool = True):
@@ -40,27 +44,37 @@ class RandomK(Compressor):
             key=key,
             err=jnp.zeros((n,) if self.error_feedback else (1,), jnp.float32))
 
-    def aggregate(self, bucket: jax.Array, state: RandomKState,
-                  axes: AxisNames):
+    def _indices(self, n: int, state: RandomKState) -> jax.Array:
+        """The shared coordinate set — identical on all devices, and
+        re-derivable in decode (same state key), so it stays off the wire."""
+        _, sub = jax.random.split(state.key)
+        return jax.random.permutation(sub, n)[:self.k_for(n)]
+
+
+    def encode(self, bucket: jax.Array, state: RandomKState,
+               rank: Optional[jax.Array] = None) -> Payload:
+        idx = self._indices(bucket.shape[0], state)
+        g = self._compensated(bucket, state)
+        return Payload({"vals": g[idx]}, associative=True)
+
+    def decode(self, payload: Payload, bucket: jax.Array,
+               state: RandomKState):
         n = bucket.shape[0]
         k = self.k_for(n)
-        key, sub = jax.random.split(state.key)
-        idx = jax.random.permutation(sub, n)[:k]   # identical on all devices
-        g = bucket.astype(jnp.float32)
-        if self.error_feedback:
-            g = g + state.err
-        vals = jax.lax.pmean(g[idx], tuple(axes))
+        idx = self._indices(n, state)
         scale = (n / k) if self.rescale else 1.0
-        out = jnp.zeros((n,), jnp.float32).at[idx].set(vals * scale)
+        out = jnp.zeros((n,), jnp.float32).at[idx].set(
+            payload.tensors["vals"] * scale)
+        key, _ = jax.random.split(state.key)
         if self.error_feedback:
-            own = jnp.zeros((n,), jnp.float32).at[idx].set(g[idx] * scale)
+            g = self._compensated(bucket, state)
+            own_vals = payload.local["vals"] if payload.local is not None \
+                else g[idx]
+            own = jnp.zeros((n,), jnp.float32).at[idx].set(own_vals * scale)
             new_err = g - own
         else:
             new_err = state.err
         return out.astype(bucket.dtype), RandomKState(key=key, err=new_err)
-
-    def compressed_bytes(self, n, itemsize=4):
-        return self.k_for(n) * 4  # values only; indices derived from seed
 
     def encode_decode_flops(self, n):
         return 4.0 * n  # permutation + gather/scatter ~ O(n)

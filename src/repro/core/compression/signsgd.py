@@ -1,32 +1,36 @@
 """SignSGD with majority vote (Bernstein et al., 2018).
 
-32× compression (1 bit per fp32 element) but NOT all-reduce compatible
-(paper Table 3): the majority-vote decode requires each worker to see every
-worker's sign bitmap, so aggregation is an all-gather of packed bitmaps and
-wire cost grows linearly in p — the paper's Figure 7 scaling failure, which
-we model and reproduce.
+~32× compression (1 bit per fp32 element) but NOT associative (paper
+Table 3): the majority-vote decode requires each worker to see every
+worker's sign bitmap, so the payload all-gathers and wire cost grows
+linearly in p — the paper's Figure 7 scaling failure, which we model and
+reproduce.
 
-We use the *scaled* variant (signal magnitude = mean |g|, all-reduced as a
-scalar alongside) so the aggregate is a drop-in mean-gradient substitute.
-Bit pack/unpack is the encode/decode hot spot -> ``kernels/bitpack.py``.
+We use the *scaled* variant: the payload carries the packed bitmap plus the
+local mean |g| scalar; decode votes over the gathered bitmaps and averages
+the gathered scales, making the aggregate a drop-in mean-gradient
+substitute.  Bit pack/unpack is the encode/decode hot spot ->
+``kernels/bitpack.py``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression.base import AxisNames, Compressor
+from repro.core.compression.base import (Compressor, Payload,
+                                         register_compressor)
 
 
 class SignSGDState(NamedTuple):
     err: jax.Array
 
 
+@register_compressor("signsgd", error_feedback="error_feedback")
 class SignSGDMajorityVote(Compressor):
     name = "signsgd"
-    all_reduce_compatible = False
+    associative = False
 
     def __init__(self, error_feedback: bool = True):
         self.error_feedback = error_feedback
@@ -35,28 +39,29 @@ class SignSGDMajorityVote(Compressor):
         return SignSGDState(err=jnp.zeros((n,) if self.error_feedback else (1,),
                                           jnp.float32))
 
-    def aggregate(self, bucket: jax.Array, state: SignSGDState,
-                  axes: AxisNames):
+
+    def encode(self, bucket: jax.Array, state: SignSGDState,
+               rank: Optional[jax.Array] = None) -> Payload:
+        from repro.kernels import ops as kops
+        g = self._compensated(bucket, state)
+        return Payload({"bits": kops.pack_signs(g),
+                        "scale": jnp.mean(jnp.abs(g))},
+                       associative=False)
+
+    def decode(self, payload: Payload, bucket: jax.Array,
+               state: SignSGDState):
         from repro.kernels import ops as kops
         n = bucket.shape[0]
-        g = bucket.astype(jnp.float32)
-        if self.error_feedback:
-            g = g + state.err
-        packed = kops.pack_signs(g)                       # (ceil(n/32),) u32
-        # all-gather of bitmaps: the linear-in-p cost the paper measures
-        gathered = jax.lax.all_gather(packed, tuple(axes))  # (p…, words)
-        gathered = gathered.reshape(-1, packed.shape[0])
+        gathered = payload.tensors["bits"]                # (p, words)
         votes = kops.popcount_votes(gathered, n)          # (n,) #positive
         p = gathered.shape[0]
         majority = jnp.where(2 * votes >= p, 1.0, -1.0).astype(jnp.float32)
-        scale = jax.lax.pmean(jnp.mean(jnp.abs(g)), tuple(axes))
-        out = majority * scale
-        new_err = (g - out) if self.error_feedback else state.err
+        out = majority * jnp.mean(payload.tensors["scale"])
+        if self.error_feedback:
+            new_err = self._compensated(bucket, state) - out
+        else:
+            new_err = state.err
         return out.astype(bucket.dtype), SignSGDState(err=new_err)
-
-    # ---- perf-model hooks ----
-    def compressed_bytes(self, n, itemsize=4):
-        return -(-n // 8)  # 1 bit/element, per peer in the all-gather
 
     def encode_decode_flops(self, n):
         # pack + unpack-and-count are ~O(n) VPU ops; constant ~8 ops/element

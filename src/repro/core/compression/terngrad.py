@@ -1,16 +1,20 @@
 """TernGrad (Wen et al., 2017) — stochastic ternarization {-1, 0, +1}·s.
 
-NOT all-reduce compatible (paper Table 3): per-worker scales differ, so
-aggregation all-gathers int8 ternaries + scales.  Unbiased by construction.
+NOT associative (paper Table 3): per-worker scales differ, so the payload
+(int8 ternaries + scale) all-gathers.  Unbiased by construction.
+
+The derived wire bytes are truthful: ternaries ride the wire as int8 (no
+2-bit packing in this implementation), plus the fp32 scale scalar.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression.base import AxisNames, Compressor
+from repro.core.compression.base import (Compressor, Payload,
+                                         register_compressor)
 
 
 class TernGradState(NamedTuple):
@@ -18,9 +22,10 @@ class TernGradState(NamedTuple):
     err: jax.Array
 
 
+@register_compressor("terngrad", error_feedback="error_feedback")
 class TernGrad(Compressor):
     name = "terngrad"
-    all_reduce_compatible = False
+    associative = False
 
     def __init__(self, error_feedback: bool = False):
         self.error_feedback = error_feedback
@@ -30,29 +35,33 @@ class TernGrad(Compressor):
             key=key,
             err=jnp.zeros((n,) if self.error_feedback else (1,), jnp.float32))
 
-    def aggregate(self, bucket: jax.Array, state: TernGradState,
-                  axes: AxisNames):
-        key, sub = jax.random.split(state.key)
-        sub = jax.random.fold_in(sub, jax.lax.axis_index(tuple(axes)))
-        g = bucket.astype(jnp.float32)
-        if self.error_feedback:
-            g = g + state.err
+
+    def encode(self, bucket: jax.Array, state: TernGradState,
+               rank: Optional[jax.Array] = None) -> Payload:
+        _, sub = jax.random.split(state.key)
+        if rank is not None:
+            sub = jax.random.fold_in(sub, rank)
+        g = self._compensated(bucket, state)
         scale = jnp.max(jnp.abs(g)) + 1e-12
         prob = jnp.abs(g) / scale
         bern = jax.random.bernoulli(sub, prob).astype(jnp.int8)
-        tern = (jnp.sign(g).astype(jnp.int8) * bern)
-        gt = jax.lax.all_gather(tern, tuple(axes))
-        gs = jax.lax.all_gather(scale, tuple(axes))
+        tern = jnp.sign(g).astype(jnp.int8) * bern
+        return Payload({"tern": tern, "scale": scale}, associative=False)
+
+    def decode(self, payload: Payload, bucket: jax.Array,
+               state: TernGradState):
+        gt = payload.tensors["tern"]                  # (p, n) int8
+        gs = payload.tensors["scale"]                 # (p,)
         p = gt.shape[0]
         out = jnp.einsum("pn,p->n", gt.astype(jnp.float32), gs) / p
+        key, _ = jax.random.split(state.key)
         if self.error_feedback:
-            new_err = g - tern.astype(jnp.float32) * scale
+            g = self._compensated(bucket, state)
+            new_err = g - payload.local["tern"].astype(jnp.float32) \
+                * payload.local["scale"]
         else:
             new_err = state.err
         return out.astype(bucket.dtype), TernGradState(key=key, err=new_err)
-
-    def compressed_bytes(self, n, itemsize=4):
-        return n * 2 / 8 + 4  # 2 bits/element + scale, per peer
 
     def encode_decode_flops(self, n):
         return 5.0 * n

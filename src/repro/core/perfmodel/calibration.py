@@ -108,10 +108,11 @@ def paper_spec(method: str, workload: Workload) -> CompressionSpec:
 
 def spec_from_compressor(comp, n_elements: int, t_encode_decode: float,
                          itemsize: int = 4) -> CompressionSpec:
-    """Bridge: build a perf-model spec from a live Compressor instance."""
-    total = comp.compressed_bytes(n_elements, itemsize)
-    return CompressionSpec(comp.name, t_encode_decode, (total,),
-                           comp.all_reduce_compatible)
+    """Bridge: build a perf-model spec from a live Compressor instance.
+    Payload bytes are derived per collective round from the compressor's
+    actual encoded payloads (see ``CompressionSpec.for_compressor``)."""
+    return CompressionSpec.for_compressor(comp, n_elements, t_encode_decode,
+                                          itemsize)
 
 
 # ---- published end-to-end anchors (for verification) ------------------------

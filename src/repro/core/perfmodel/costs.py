@@ -54,6 +54,17 @@ def all_to_all(n: float, p: int, bw: float, alpha: float) -> float:
     return alpha * (p - 1) + n * (p - 1) / (p * bw)
 
 
+def payload_collective(associative: bool, n: float, p: int, bw: float,
+                       alpha: float, congestion: float = 1.0) -> float:
+    """Cost of moving one compression payload — the analytical mirror of
+    ``compression.base.reduce_payload``: associative payloads ring
+    all-reduce (constant in p); the rest all-gather (linear in p, with the
+    incast congestion factor)."""
+    if associative:
+        return ring_all_reduce(n, p, bw, alpha)
+    return all_gather(n, p, bw, alpha, congestion)
+
+
 COLLECTIVES = {
     "ring_all_reduce": ring_all_reduce,
     "tree_all_reduce": tree_all_reduce,

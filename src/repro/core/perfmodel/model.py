@@ -48,8 +48,23 @@ class CompressionSpec:
     def total_payload(self) -> float:
         return sum(self.payload_bytes)
 
+    @property
+    def associative(self) -> bool:
+        return self.all_reduce_compatible
+
     def compression_ratio(self, model_bytes: float) -> float:
         return model_bytes / max(self.total_payload, 1e-12)
+
+    @classmethod
+    def for_compressor(cls, comp, n_elements: int, t_encode_decode: float,
+                       itemsize: int = 4) -> "CompressionSpec":
+        """Build the spec from a live ``Compressor``: one payload entry per
+        collective round, with bytes derived from the actual encoded
+        payloads (``wire_round_bytes``) — nothing hand-maintained."""
+        return cls(comp.name, t_encode_decode,
+                   tuple(float(b) for b in
+                         comp.wire_round_bytes(n_elements, itemsize)),
+                   comp.associative)
 
 
 GAMMA_DEFAULT = 1.05   # paper: observed 1.04–1.1
@@ -74,17 +89,15 @@ def compressed_time(w: Workload, p: int, hw: Hardware,
                     spec: CompressionSpec) -> float:
     """Gradient-compression per-iteration time (paper App. B).
 
-    All-reduce-compatible schemes ring-reduce each payload; the rest
-    all-gather (linear in p, with the congestion factor)."""
+    Each payload round pays the collective its associativity selects
+    (``costs.payload_collective`` — the analytical mirror of the runtime
+    reduce phase)."""
     if p <= 1:
         return w.t_comp
-    comm = 0.0
-    for payload in spec.payload_bytes:
-        if spec.all_reduce_compatible:
-            comm += costs.ring_all_reduce(payload, p, hw.net_bw, hw.alpha)
-        else:
-            comm += costs.all_gather(payload, p, hw.net_bw, hw.alpha,
-                                     hw.allgather_congestion)
+    comm = sum(
+        costs.payload_collective(spec.associative, payload, p, hw.net_bw,
+                                 hw.alpha, hw.allgather_congestion)
+        for payload in spec.payload_bytes)
     return w.t_comp + spec.t_encode_decode + comm
 
 

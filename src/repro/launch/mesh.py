@@ -8,16 +8,7 @@ compression targets (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import jax
-
-
-def _mk(shape, axes):
-    try:
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    except TypeError:  # older jax without axis_types
-        return jax.make_mesh(shape, axes)
+from repro.parallel.compat import make_mesh as _mk
 
 
 def make_production_mesh(*, multi_pod: bool = False):

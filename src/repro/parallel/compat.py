@@ -1,0 +1,33 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo supports jax >= 0.4.3x (CI's pinned ``jax[cpu]``) through current:
+``shard_map`` graduated from ``jax.experimental`` (gaining ``check_vma`` in
+place of ``check_rep``), and ``jax.make_mesh`` grew ``axis_types``.  Every
+mesh/shard_map construction in src, tests, and benchmarks goes through
+these two helpers.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map          # jax >= 0.6
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+
+def make_mesh(shape, axes):
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):  # older jax without axis_types
+        return jax.make_mesh(shape, axes)

@@ -45,18 +45,7 @@ from repro.models import Model
 from repro.models.layers import ShardCtx
 from repro.train import optimizer as opt_mod
 
-try:
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
-except ImportError:  # older jax
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_rep=False)
+from repro.parallel.compat import shard_map
 
 MOE_AUX_COEF = 0.01
 
@@ -390,7 +379,9 @@ def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
                             is_leaf=lambda s: isinstance(s, P))
 
     def aggregate(grads, agg_states):
-        """Returns aggregated grads + new compressor states."""
+        """Returns aggregated grads + new compressor states.  Each bucket
+        runs the encode -> reduce -> decode pipeline; the aggregator picks
+        the collective from the payload's associativity."""
         if setup.agg_cfg.compressor == "none" or \
                 not (setup.agg_cfg.compress_axes or setup.agg_cfg.raw_axes):
             return grads, agg_states
@@ -400,7 +391,7 @@ def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
         outs, news = [], []
         for i, b in enumerate(buckets):
             st = squeezed[i] if squeezed else ()
-            ob, ns = aggregator._aggregate_one(b, st)
+            ob, ns = aggregator.aggregate_one(b, st)
             outs.append(ob)
             news.append(ns)
         out = bucketing.from_buckets(outs, grads, layout)

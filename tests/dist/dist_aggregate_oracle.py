@@ -1,0 +1,131 @@
+"""Multi-device oracle for the encode -> Payload -> reduce -> decode
+pipeline.
+
+Because encode and decode are collective-free by contract, every
+compressor's 4-device mesh aggregation can be simulated EXACTLY on the
+host: run encode per device rank, replace the reduce phase with a
+numpy-style mean (associative) or stack (all-gather), and decode per
+device.  The shard_map result must match the simulation bitwise-close for
+all registered compressors — this pins the mesh collectives to the payload
+semantics the wire spec declares.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core.compression import base as cbase  # noqa: E402
+from repro.core.compression.powersgd import orthonormalize  # noqa: E402
+from repro.parallel.compat import make_mesh, shard_map  # noqa: E402
+
+N = 512
+N_DEV = 4
+
+
+def as_np(x):
+    if jnp.issubdtype(x.dtype, jax.dtypes.prng_key):
+        x = jax.random.key_data(x)
+    return np.asarray(x)
+
+METHODS = [
+    ("none", {}),
+    ("powersgd", dict(rank=2, min_cols=16)),
+    ("signsgd", {}),
+    ("mstopk", dict(frac=0.02)),
+    ("randomk", {}),
+    ("qsgd", dict(bits=8)),
+    ("qsgd", dict(bits=8, error_feedback=True)),
+    ("terngrad", {}),
+]
+
+
+def simulate(comp, buckets, state):
+    """Host-side re-enactment of encode_and_reduce + decode, with plain
+    means/stacks standing in for the mesh collectives."""
+    def reduce_sim(payloads):
+        if payloads[0].associative:
+            tensors = jax.tree.map(lambda *ts: sum(ts) / len(ts),
+                                   *[p.tensors for p in payloads])
+            return [cbase.Payload(tensors, associative=True, reduced=True,
+                                  local=p.tensors) for p in payloads]
+        tensors = jax.tree.map(lambda *ts: jnp.stack(ts),
+                               *[p.tensors for p in payloads])
+        return [cbase.Payload(tensors, associative=False, reduced=True,
+                              local=p.tensors) for p in payloads]
+
+    if comp.registry_name == "powersgd":
+        from repro.kernels import ops as kops
+        red1 = reduce_sim([comp.encode(b, state) for b in buckets])
+        outs = []
+        for i, b in enumerate(buckets):
+            p_hat = orthonormalize(red1[i].tensors["p"])
+            m, _ = comp._matrix(b, state)
+            q_i = cbase.Payload({"q": kops.powersgd_encode(m.T, p_hat)},
+                                associative=True)
+            red1[i] = (p_hat, q_i)
+        red2 = reduce_sim([q for _, q in red1])
+        for i, b in enumerate(buckets):
+            combined = cbase.Payload(
+                {"p": red1[i][0], "q": red2[i].tensors["q"]},
+                associative=True, reduced=True)
+            outs.append(comp.decode(combined, b, state))
+        return outs
+
+    payloads = [comp.encode(b, state, rank=jnp.int32(i))
+                for i, b in enumerate(buckets)]
+    reduced = reduce_sim(payloads)
+    return [comp.decode(reduced[i], b, state)
+            for i, b in enumerate(buckets)]
+
+
+def mesh_run(comp, flat, state):
+    mesh = make_mesh((N_DEV,), ("data",))
+    st_dev = jax.tree.map(lambda x: jnp.broadcast_to(x[None],
+                                                     (N_DEV,) + x.shape),
+                          state)
+    st_spec = jax.tree.map(lambda _: P("data"), st_dev)
+
+    def run(b, st):
+        st = jax.tree.map(lambda x: x[0], st)
+        out, new = comp.aggregate(b, st, ("data",))
+        return out, jax.tree.map(lambda x: x[None], new)
+
+    f = shard_map(run, mesh, in_specs=(P("data"), st_spec),
+                  out_specs=(P("data"), st_spec))
+    out, new_st = f(flat, st_dev)
+    return out.reshape(N_DEV, N), new_st
+
+
+def main():
+    for name, kw in METHODS:
+        comp = cbase.make(name, **kw)
+        key = jax.random.key(7)
+        flat = jax.random.normal(key, (N_DEV * N,))
+        buckets = [flat[i * N:(i + 1) * N] for i in range(N_DEV)]
+        state = comp.init_state(N, jax.random.key(3))
+
+        sim = simulate(comp, buckets, state)
+        out_mesh, st_mesh = mesh_run(comp, flat, state)
+
+        for i in range(N_DEV):
+            want, want_st = sim[i]
+            np.testing.assert_allclose(np.asarray(out_mesh[i]),
+                                       np.asarray(want), rtol=1e-5,
+                                       atol=1e-5, err_msg=f"{comp.name}[{i}]")
+            for a, b in zip(jax.tree.leaves(
+                    jax.tree.map(lambda x: x[i], st_mesh)),
+                    jax.tree.leaves(want_st)):
+                np.testing.assert_allclose(as_np(a), as_np(b),
+                                           rtol=1e-5, atol=1e-5,
+                                           err_msg=f"{comp.name} state[{i}]")
+        print(f"  {comp.name}: mesh == host simulation on {N_DEV} devices")
+    print("OK dist_aggregate_oracle")
+
+
+if __name__ == "__main__":
+    main()

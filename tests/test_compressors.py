@@ -12,12 +12,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.compression import base as cbase
 from repro.kernels import ref
+from repro.parallel.compat import make_mesh, shard_map
 
 
 def one_dev_aggregate(comp, bucket, state, steps=1):
     """Run aggregate() under a 1-device mesh; returns (outs, final state)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
 
     def run(b, st):
         outs = []
@@ -27,8 +27,8 @@ def one_dev_aggregate(comp, bucket, state, steps=1):
         return jnp.stack(outs), st
 
     st_spec = jax.tree.map(lambda _: P(), state)
-    f = jax.shard_map(run, mesh=mesh, in_specs=(P(None), st_spec),
-                      out_specs=(P(None), st_spec), check_vma=False)
+    f = shard_map(run, mesh, in_specs=(P(None), st_spec),
+                  out_specs=(P(None), st_spec))
     return f(bucket, state)
 
 
@@ -53,8 +53,11 @@ def test_factory_covers_table3():
 
 def test_compression_ratios(g):
     n = g.shape[0]
+    # ratios are derived from the ACTUAL payloads now: signsgd pays the
+    # uint32 word padding + the fp32 scale scalar, so ~30x rather than the
+    # idealized 32x at n=1000
     assert cbase.make("signsgd").compression_ratio(n) == pytest.approx(
-        32, rel=0.05)
+        32, rel=0.1)
     assert cbase.make("mstopk", frac=0.01).compression_ratio(n) == \
         pytest.approx(50, rel=0.1)      # 8B per kept element
     assert cbase.make("qsgd", bits=8).compression_ratio(n) == \

@@ -5,6 +5,10 @@ roofline-parser conservation.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dep; pip install -r "
+                                         "requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.perfmodel import calibration as cal
@@ -85,14 +89,14 @@ def test_quantized_gather_error_bound_and_exact_backward(rows, cols, seed):
     from jax.sharding import PartitionSpec as P
 
     from repro.models.layers import _mk_quantized_gather
+    from repro.parallel.compat import make_mesh, shard_map
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     w = jax.random.normal(jax.random.key(seed), (rows, cols))
 
     f = _mk_quantized_gather(("data",), 0)
-    g = jax.shard_map(f, mesh=mesh, in_specs=(P(None, None),),
-                      out_specs=P(None, None), check_vma=False)
+    g = shard_map(f, mesh, in_specs=(P(None, None),),
+                  out_specs=P(None, None))
     out = g(w)
     step = float(jnp.max(jnp.abs(w))) / 127.0
     assert float(jnp.max(jnp.abs(out - w))) <= step / 2 + 1e-6
@@ -101,9 +105,9 @@ def test_quantized_gather_error_bound_and_exact_backward(rows, cols, seed):
     def loss(x):
         return jnp.sum(f(x) * 2.0)
 
-    grads = jax.shard_map(jax.grad(loss), mesh=mesh,
-                          in_specs=(P(None, None),),
-                          out_specs=P(None, None), check_vma=False)(w)
+    grads = shard_map(jax.grad(loss), mesh,
+                      in_specs=(P(None, None),),
+                      out_specs=P(None, None))(w)
     np.testing.assert_allclose(np.asarray(grads), 2.0, rtol=1e-6)
 
 
