@@ -2,23 +2,18 @@
 instrumented on this repo's code; CPU wall times — the relative ordering,
 not absolute V100/TPU numbers, is the comparable part).
 
-The three-phase API makes the paper's breakdown measurable on our own
-kernels: ``encode`` and ``decode`` are collective-free by contract, so they
-are timed as plain jitted calls; the full ``aggregate`` (encode -> reduce ->
-decode under a 1-device mesh) gives the round-trip.  Emits one JSON row per
-method, suitable for ``BENCH_*.json`` trajectory tracking:
+Since PR 2 this is a thin client of the experiments subsystem: each
+method is an ``ExperimentSpec(kind="measured")`` evaluated by the
+``MeasuredBackend`` (encode and decode are collective-free by contract,
+so they are timed as plain jitted calls; the full ``aggregate`` under a
+1-device mesh gives the round-trip).  Emits one JSON row per method,
+suitable for ``BENCH_*.json`` trajectory tracking:
 
     PYTHONPATH=src python -m benchmarks.encode_decode --out BENCH_encode_decode.json
 """
 from __future__ import annotations
 
 import json
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.compression import base as cbase
 
 METHODS = [("powersgd", dict(rank=4)), ("powersgd", dict(rank=8)),
            ("signsgd", {}), ("mstopk", dict(frac=0.01)),
@@ -26,60 +21,23 @@ METHODS = [("powersgd", dict(rank=4)), ("powersgd", dict(rank=8)),
            ("none", {})]
 
 
-def _time(fn, *args, reps: int = 5, warmup: int = 2) -> float:
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps
+def specs(n: int = 1 << 20) -> list:
+    """The micro-bench grid: one measured spec per registered method."""
+    from repro.experiments import ExperimentSpec, live_method_id
+    return [ExperimentSpec(workload=f"bucket-{n}", kind="measured",
+                           method=live_method_id(name, **kw), n_elements=n)
+            for name, kw in METHODS]
 
 
 def measure(n: int = 1 << 20) -> list[dict]:
     """Per-method T_encode / T_decode / full-aggregate wall times for an
     n-element bucket, plus the payload-derived wire stats."""
-    from jax.sharding import PartitionSpec as P
-
-    from repro.parallel.compat import make_mesh, shard_map
-
-    mesh = make_mesh((1,), ("data",))
-    g = jax.random.normal(jax.random.key(0), (n,))
+    from repro.experiments import MeasuredBackend, Runner
     rows = []
-    for name, kw in METHODS:
-        comp = cbase.make(name, **kw)
-        st = comp.init_state(n, jax.random.key(1))
-        st_spec = jax.tree.map(lambda _: P(), st)
-
-        # full round-trip under a 1-device mesh (collectives are no-ops)
-        f_all = jax.jit(shard_map(
-            lambda b, s: comp.aggregate(b, s, ("data",)),
-            mesh, in_specs=(P(None), st_spec), out_specs=(P(None), st_spec)))
-
-        # the reduced payload decode() consumes, produced once up front
-        # (out_specs=P() is a spec prefix: every payload leaf replicated)
-        f_prep = jax.jit(shard_map(
-            lambda b, s: comp.encode_and_reduce(b, s, ("data",)),
-            mesh, in_specs=(P(None), st_spec), out_specs=P()))
-        payload = f_prep(g, st)
-
-        # T_encode = the full encode side (encode_and_reduce under one
-        # device, where the collectives are no-ops) — for PowerSGD that
-        # includes BOTH encode rounds and the orthonormalization, not just
-        # round 1.  decode is collective-free by contract: plain jitted call.
-        t_enc = _time(f_prep, g, st)
-        t_dec = _time(jax.jit(lambda pl, b, s: comp.decode(pl, b, s)),
-                      payload, g, st)
-        t_all = _time(f_all, g, st)
-
-        rows.append(dict(
-            bench="encode_decode", method=comp.name, n=n,
-            t_encode_us=round(t_enc * 1e6, 1),
-            t_decode_us=round(t_dec * 1e6, 1),
-            us_per_call=round(t_all * 1e6, 1),
-            wire_bytes=int(comp.compressed_bytes(n)),
-            rounds=len(comp.wire_round_bytes(n)),
-            associative=comp.associative,
-            ratio=round(comp.compression_ratio(n), 1)))
+    for r in Runner(MeasuredBackend()).run(specs(n)):
+        if not r.ok:
+            raise RuntimeError(f"{r.spec.method}: {r.error}")
+        rows.append(dict(bench="encode_decode", **r.metrics))
     return rows
 
 

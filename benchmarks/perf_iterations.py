@@ -11,9 +11,14 @@ Cells (chosen per the §Perf selection rule):
      (full-ZeRO-3 param gathers cross the DCN every layer)
   C  xlstm-350m × train_4k × single      — worst roofline fraction
      (sequential sLSTM recurrence traffic)
+
+Since PR 2 the cell list is data: each variant is an
+``ExperimentSpec(kind="dryrun")`` (arch/shape/mesh coordinates + the
+ParallelPlan overrides), evaluated by the ``MeasuredBackend`` — which
+AOT-compiles each cell via ``repro.launch.dryrun`` (``--resume`` reuses
+existing ``artifacts/perf`` records instead).
 """
 import os
-import sys
 
 if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = \
@@ -22,68 +27,85 @@ if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
 import argparse  # noqa: E402
 import json  # noqa: E402
 
-CELLS = {
-    "A": ("tinyllama-1.1b", "train_4k", "multi", [
-        ("A0-baseline-syncSGD", {}),
-        ("A1-powersgd-dcn", dict(compression="powersgd",
-                                 compress_axes="pod")),
-        ("A2-signsgd-dcn", dict(compression="signsgd",
-                                compress_axes="pod")),
-        ("A3-powersgd-dcn-100MB-buckets", dict(
-            compression="powersgd", compress_axes="pod", bucket_mb=100)),
-    ]),
-    "B": ("arctic-480b", "train_4k", "multi", [
-        ("B0-baseline-fullshard", {}),
-        ("B1-hsdp-bf16", dict(fsdp_shard_pods=False)),
-        ("B2-hsdp-bf16-powersgd-dcn", dict(
-            fsdp_shard_pods=False, compression="powersgd",
-            compress_axes="pod", powersgd_rank=8)),
-        ("B3-hsdp-bf16-int8gather", dict(
-            fsdp_shard_pods=False, gather_quant="int8")),
-    ]),
-    "C": ("xlstm-350m", "train_4k", "single", [
-        ("C0-baseline", {}),
-        ("C1-slstm-bf16-recurrence", dict()),   # code-level lever, see tag
-    ]),
-}
+
+def _cell(arch: str, shape: str, mesh: str, variant: str, **overrides):
+    from repro.experiments import ExperimentSpec
+    return ExperimentSpec(
+        workload=arch, shape=shape, mesh=mesh, variant=variant,
+        kind="dryrun", method="plan",
+        workers=512 if mesh == "multi" else 256,
+        compress_axes=str(overrides.get("compress_axes", "pod")),
+        overrides=tuple(sorted(overrides.items())))
+
+
+def cells() -> list:
+    """The §Perf matrix as a flat list of specs (variant prefix = cell)."""
+    return [
+        _cell("tinyllama-1.1b", "train_4k", "multi", "A0-baseline-syncSGD"),
+        _cell("tinyllama-1.1b", "train_4k", "multi", "A1-powersgd-dcn",
+              compression="powersgd", compress_axes="pod"),
+        _cell("tinyllama-1.1b", "train_4k", "multi", "A2-signsgd-dcn",
+              compression="signsgd", compress_axes="pod"),
+        _cell("tinyllama-1.1b", "train_4k", "multi",
+              "A3-powersgd-dcn-100MB-buckets", compression="powersgd",
+              compress_axes="pod", bucket_mb=100),
+        _cell("arctic-480b", "train_4k", "multi", "B0-baseline-fullshard"),
+        _cell("arctic-480b", "train_4k", "multi", "B1-hsdp-bf16",
+              fsdp_shard_pods=False),
+        _cell("arctic-480b", "train_4k", "multi", "B2-hsdp-bf16-powersgd-dcn",
+              fsdp_shard_pods=False, compression="powersgd",
+              compress_axes="pod", powersgd_rank=8),
+        _cell("arctic-480b", "train_4k", "multi", "B3-hsdp-bf16-int8gather",
+              fsdp_shard_pods=False, gather_quant="int8"),
+        _cell("xlstm-350m", "train_4k", "single", "C0-baseline"),
+        # C1 is a code-level lever (xlstm.SLSTM_BF16_RECURRENCE), toggled
+        # around the backend call below
+        _cell("xlstm-350m", "train_4k", "single", "C1-slstm-bf16-recurrence"),
+    ]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", default=None, choices=list(CELLS) + [None])
+    ap.add_argument("--cell", default=None, choices=["A", "B", "C", None])
     ap.add_argument("--out", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="reuse existing artifacts/perf records instead "
+                         "of recompiling every cell (stale after model/"
+                         "plan changes; code-level levers like C1 only "
+                         "take effect on a recompile)")
     args = ap.parse_args(argv)
 
+    from repro.experiments import MeasuredBackend
     from repro.launch import dryrun
 
     out_dir = args.out or os.path.join(
         os.path.dirname(dryrun.ART_DIR), "perf")
-    cells = [args.cell] if args.cell else list(CELLS)
+    backend = MeasuredBackend(art_dir=out_dir, compile_missing=True,
+                              reuse_artifacts=args.resume)
+    specs = [s for s in cells()
+             if args.cell is None or s.variant.startswith(args.cell)]
     rows = []
-    for key in cells:
-        arch, shape, mesh, variants = CELLS[key]
-        for vname, overrides in variants:
-            if vname.startswith("C1"):
-                from repro.models import xlstm
-                xlstm.SLSTM_BF16_RECURRENCE = True
-            rec = dryrun.run_cell(arch, shape, mesh, out_dir=out_dir,
-                                  plan_overrides=overrides, variant=vname)
-            if vname.startswith("C1"):
-                from repro.models import xlstm
-                xlstm.SLSTM_BF16_RECURRENCE = False
-            if rec["status"] == "ok":
-                rl = rec["roofline"]
-                rows.append(dict(
-                    variant=vname,
-                    compute_ms=round(rl["compute_s"] * 1e3, 1),
-                    memory_ms=round(rl["memory_s"] * 1e3, 1),
-                    ici_ms=round(rl["ici_s"] * 1e3, 1),
-                    dcn_ms=round(rl["dcn_s"] * 1e3, 1),
-                    dominant=rl["dominant"],
-                    frac=round(rl["roofline_fraction"], 4),
-                    gib=round(rl["bytes_per_device"] / 2**30, 1)))
-            else:
-                rows.append(dict(variant=vname, error=rec.get("error")))
+    for spec in specs:
+        if spec.variant.startswith("C1"):
+            from repro.models import xlstm
+            xlstm.SLSTM_BF16_RECURRENCE = True
+        rec = backend.run(spec)
+        if spec.variant.startswith("C1"):
+            from repro.models import xlstm
+            xlstm.SLSTM_BF16_RECURRENCE = False
+        if rec.ok:
+            m = rec.metrics
+            rows.append(dict(
+                variant=spec.variant,
+                compute_ms=round(m["compute_s"] * 1e3, 1),
+                memory_ms=round(m["memory_s"] * 1e3, 1),
+                ici_ms=round(m["ici_s"] * 1e3, 1),
+                dcn_ms=round(m["dcn_s"] * 1e3, 1),
+                dominant=m["dominant"],
+                frac=round(m["roofline_fraction"], 4),
+                gib=round(m["bytes_per_device"] / 2**30, 1)))
+        else:
+            rows.append(dict(variant=spec.variant, error=rec.error))
     print("\n=== §Perf ledger ===")
     for r in rows:
         print(json.dumps(r))

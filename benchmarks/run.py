@@ -1,28 +1,56 @@
 """Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 One section per paper table/figure (from the performance model, with the
-published anchors verified inline), the measured encode/decode
-micro-benchmarks of this repo's compressors, and the roofline table from
-the dry-run artifacts.  CSV lines: ``name,us_per_call,derived``.
+published anchors verified inline — including the headline "compression
+wins in only N of 200+ setups" matrix via the experiments Runner), the
+measured encode/decode micro-benchmarks of this repo's compressors, and
+the roofline table from the dry-run artifacts.
+
+Every run appends to the perf trajectory: the paper-matrix sweep persists
+to a JSON-lines ``ResultStore`` (resume-by-spec-hash), and a canonical
+``BENCH_<UTC-date>.json`` row set is written at the repo root (per-method
+encode/decode µs + anchor verdicts + the analytic headline win-rate).
+CSV lines: ``name,us_per_call,derived``.  Exits non-zero on any anchor
+failure — CI's bench-smoke gate.
 """
+import argparse
+import datetime
+import json
+import os
 import sys
 import time
 
+ROOT = os.path.join(os.path.dirname(__file__), "..")
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--encdec-n", type=int, default=1 << 20,
+                    help="bucket elements for the encode/decode "
+                         "micro-bench (smaller = faster smoke run)")
+    ap.add_argument("--store", default=os.path.join(
+        ROOT, "artifacts", "experiments", "paper_matrix.jsonl"),
+        help="JSON-lines ResultStore the paper-matrix sweep appends to "
+             "(trajectory; always recomputed — the anchor gate must "
+             "reflect the current calibration); '' disables persistence")
+    ap.add_argument("--bench-out", default=None,
+                    help="BENCH json path (default: BENCH_<UTC-date>.json "
+                         "at the repo root); '' disables")
+    args = ap.parse_args(argv)
+
     t_start = time.time()
-    import os
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
-                                    "src"))
     from benchmarks import encode_decode, paper_figures, roofline_table
 
+    bench_rows: list[dict] = []
     failures = 0
     print("=" * 72)
     print("PAPER FIGURES / TABLES (performance model + anchor checks)")
     print("=" * 72)
     for name, fn in paper_figures.ALL.items():
+        kw = ({"store": args.store or None}
+              if name == "headline_200_setups" else {})
         t0 = time.time()
-        rows, verdicts = fn()
+        rows, verdicts = fn(**kw)
         us = (time.time() - t0) * 1e6
         print(f"\n--- {name} ---")
         print(f"{name},{us:.0f},rows={len(rows)}")
@@ -36,14 +64,20 @@ def main() -> None:
             if not ok:
                 failures += 1
             print(f"  [{flag}] {claim}: predicted {got} vs paper {want}")
+            bench_rows.append(dict(bench="paper_anchor", figure=name,
+                                   claim=claim, got=str(got),
+                                   want=str(want), ok=bool(ok)))
+        if name == "headline_200_setups" and rows:
+            bench_rows.append(dict(bench="headline", **rows[0]))
 
     print("\n" + "=" * 72)
     print("ENCODE/DECODE MICRO-BENCH (our implementations, CPU wall time)")
     print("=" * 72)
-    for r in encode_decode.measure():
+    for r in encode_decode.measure(args.encdec_n):
         print(f"encdec_{r['method']},{r['us_per_call']},"
               f"enc={r['t_encode_us']}us,dec={r['t_decode_us']}us,"
               f"ratio={r['ratio']}x")
+        bench_rows.append(r)
 
     print("\n" + "=" * 72)
     print("ROOFLINE TABLE (from dry-run artifacts; single-pod mesh)")
@@ -51,10 +85,27 @@ def main() -> None:
     rows = roofline_table.load()
     print(roofline_table.markdown(rows))
 
-    print(f"\nbench_total,{(time.time() - t_start) * 1e6:.0f},"
-          f"anchor_failures={failures}")
+    total_us = (time.time() - t_start) * 1e6
+    bench_rows.append(dict(bench="total", us=round(total_us),
+                           anchor_failures=failures))
+    _write_bench(bench_rows, args.bench_out)
+
+    print(f"\nbench_total,{total_us:.0f},anchor_failures={failures}")
     if failures:
         sys.exit(1)
+
+
+def _write_bench(rows: list[dict], out: str | None) -> None:
+    """Write the canonical BENCH_<UTC-date>.json row set at the repo root
+    so the perf trajectory accumulates one dated snapshot per bench run."""
+    if out == "":
+        return
+    date = datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d")
+    path = out or os.path.join(ROOT, f"BENCH_{date}.json")
+    stamped = [dict(date=date, **r) for r in rows]
+    with open(path, "w") as f:
+        json.dump(stamped, f, indent=1)
+    print(f"\n[bench] {len(stamped)} rows -> {os.path.normpath(path)}")
 
 
 if __name__ == '__main__':

@@ -4,13 +4,14 @@ YOUR workload without running a single large-scale experiment.
 
     PYTHONPATH=src python examples/whatif_analysis.py \
         --model-mb 418 --t-comp-ms 550 --workers 96 --bw 10
-    PYTHONPATH=src python examples/whatif_analysis.py --paper  # all figures
+    PYTHONPATH=src python examples/whatif_analysis.py --paper   # all figures
+    PYTHONPATH=src python examples/whatif_analysis.py --matrix  # 200+ sweep
+
+Built on the experiments subsystem: the candidate-scheme comparison is a
+``Grid`` of ``ExperimentSpec``s run through the analytic ``Runner``, and
+``--matrix`` reproduces the paper's headline 200+-setup sweep.
 """
 import argparse
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def ascii_plot(rows, xkey, ykeys, width=56, label=""):
@@ -37,6 +38,8 @@ def main():
     ap.add_argument("--bw", type=float, default=10.0, help="Gb/s")
     ap.add_argument("--paper", action="store_true",
                     help="reproduce all simulated paper figures instead")
+    ap.add_argument("--matrix", action="store_true",
+                    help="run the paper's 200+-setup headline matrix")
     args = ap.parse_args()
 
     from repro.core.perfmodel import calibration as cal
@@ -53,6 +56,20 @@ def main():
                       f"(paper: {want})")
         return
 
+    if args.matrix:
+        from repro.experiments import (AnalyticBackend, Grid, Runner,
+                                       headline, headline_verdicts)
+        h = headline(Runner(AnalyticBackend()).run(Grid.paper_matrix()))
+        ok = all(v[-1] for v in headline_verdicts(h))
+        print(f"paper matrix: {h['setups']} setups, {h['wins']} wins "
+              f"({h['win_rate']:.1%}) — 'only 6 of 200+' "
+              f"{'qualitatively reproduced' if ok else 'NOT reproduced'}")
+        for m, wt in h["by_method"].items():
+            print(f"  {m:14s} wins {wt}")
+        for wn in h["winners"][:8]:
+            print(f"  winner: {wn['setup']}  ({wn['speedup']:.2f}x)")
+        return
+
     w = pm.Workload("user", args.model_mb * 2**20, args.t_comp_ms / 1e3)
     hw = cal.PAPER_HW.with_net(args.bw)
     p = args.workers
@@ -67,12 +84,21 @@ def main():
     req = pm.required_compression(w, p, hw)
     print(f"compression ratio for ~linear:  {req:8.1f}x\n")
 
+    # candidate schemes = one Grid over the method axis, via the Runner
+    from repro.experiments import (Grid, hardware_fields, method_fields,
+                                   workload_fields)
+    from repro.experiments.spec import ExperimentSpec
+    candidates = ["powersgd-r4", "powersgd-r8", "signsgd", "mstopk-0.01"]
+    base = ExperimentSpec(workers=p, **workload_fields(w),
+                          **hardware_fields(hw))
+    grid = Grid.over(base, scheme=[
+        method_fields(cal.paper_spec(m, w)) for m in candidates])
     print("candidate schemes (paper Table 2 overheads, byte-scaled):")
     best = ("syncSGD", t_sync)
-    for method in ("powersgd-r4", "powersgd-r8", "signsgd", "mstopk-0.01"):
-        spec = cal.paper_spec(method, w)
-        t = pm.compressed_time(w, p, hw, spec)
-        verdict = "WIN " if t < t_sync else "lose"
+    for method, r in zip(candidates, whatif.run_specs(grid)):
+        t = r.metrics["t_method_s"]
+        verdict = "WIN " if r.metrics["win"] else \
+            ("win?" if t < t_sync else "lose")
         print(f"  {method:14s} {t * 1e3:8.1f} ms/iter  [{verdict}]")
         if t < best[1]:
             best = (method, t)

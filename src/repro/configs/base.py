@@ -97,10 +97,10 @@ class ArchConfig:
     rope_theta: float = 1e6
     tie_embeddings: bool = False
     norm_eps: float = 1e-6
-    moe: MoEConfig = MoEConfig()
-    ssm: SSMConfig = SSMConfig()
-    encdec: EncDecConfig = EncDecConfig()
-    plan: ParallelPlan = ParallelPlan()
+    moe: MoEConfig = dataclasses.field(default_factory=MoEConfig)
+    ssm: SSMConfig = dataclasses.field(default_factory=SSMConfig)
+    encdec: EncDecConfig = dataclasses.field(default_factory=EncDecConfig)
+    plan: ParallelPlan = dataclasses.field(default_factory=ParallelPlan)
     # which layers are attention vs ssm for hybrids; "all_attn", "zamba2",
     # "xlstm" (see models/)
     block_pattern: str = "all_attn"

@@ -2,16 +2,54 @@
 
 Each function reproduces one simulated figure and returns a plain table
 (list of dicts) so benchmarks/tests/CLI can consume it uniformly.
+
+Since PR 2 every sweep is a declarative ``Grid`` expansion evaluated by
+the ``repro.experiments`` Runner: the function body builds
+``ExperimentSpec``s (workload/hardware/method lifted into exact inline
+fields) and maps the ``AnalyticBackend`` metrics back into the historical
+row format.  The figure *is* its grid — the same specs can be persisted,
+hashed, resumed, and re-run on a measured backend.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Iterable, Sequence
 
 from repro.core.perfmodel import calibration as cal
 from repro.core.perfmodel import model as pm
 from repro.core.perfmodel.hardware import Hardware
+
+_RUNNER = None
+
+
+def run_specs(specs):
+    """Evaluate specs/Grid on the shared analytic Runner (module-level so
+    repeated figure renders reuse one backend)."""
+    global _RUNNER
+    if _RUNNER is None:
+        from repro.experiments import AnalyticBackend, Runner
+        _RUNNER = Runner(AnalyticBackend())
+    return _RUNNER.run(specs)
+
+
+def _base(w: pm.Workload, p: int, hw: Hardware,
+          spec: pm.CompressionSpec | None = None):
+    from repro.experiments import (ExperimentSpec, hardware_fields,
+                                   method_fields, workload_fields)
+    fields = dict(workers=p, **workload_fields(w), **hardware_fields(hw))
+    if spec is not None:
+        fields.update(method_fields(spec))
+    return ExperimentSpec(**fields)
+
+
+def _metrics(r) -> dict:
+    """Unwrap a Result, surfacing the backend's stored error (the Backend
+    contract converts modeling exceptions into error Results; a figure
+    sweep must fail with the real cause, not a KeyError)."""
+    if not r.ok:
+        raise RuntimeError(
+            f"analytic backend failed for {r.spec.label()}: {r.error}")
+    return r.metrics
 
 
 def bandwidth_sweep(w: pm.Workload, p: int, hw: Hardware,
@@ -19,13 +57,14 @@ def bandwidth_sweep(w: pm.Workload, p: int, hw: Hardware,
                     gbps: Sequence[float] = (1, 2, 4, 8, 10, 15, 20, 30),
                     ) -> list[dict]:
     """Figs 3/17: syncSGD vs compression across network bandwidth."""
+    from repro.experiments import Grid
+    grid = Grid.over(_base(w, p, hw, spec),
+                     net_bw=[g * 1e9 / 8 for g in gbps])
     rows = []
-    for g in gbps:
-        h = hw.with_net(g)
-        t_sync = pm.sync_sgd_time(w, p, h)
-        t_comp = pm.compressed_time(w, p, h, spec)
-        rows.append(dict(gbps=g, t_sync=t_sync, t_comp=t_comp,
-                         speedup=t_sync / t_comp))
+    for g, r in zip(gbps, run_specs(grid)):
+        m = _metrics(r)
+        rows.append(dict(gbps=g, t_sync=m["t_sync_s"],
+                         t_comp=m["t_method_s"], speedup=m["speedup"]))
     return rows
 
 
@@ -33,14 +72,18 @@ def batch_size_sweep(w: pm.Workload, p: int, hw: Hardware,
                      spec_builder, batches: Sequence[int] = (16, 32, 64),
                      ) -> list[dict]:
     """Fig 8: large batches hide communication, shrinking compression's edge."""
-    rows = []
+    from repro.experiments import Grid, method_fields, workload_fields
+    vals = []
     for b in batches:
         wb = cal.batch_scaled(w, b)
-        spec = spec_builder(wb)
-        t_sync = pm.sync_sgd_time(wb, p, hw)
-        t_comp = pm.compressed_time(wb, p, hw, spec)
-        rows.append(dict(batch=b, t_sync=t_sync, t_comp=t_comp,
-                         speedup=t_sync / t_comp))
+        vals.append(dict(batch=b, **workload_fields(wb),
+                         **method_fields(spec_builder(wb))))
+    grid = Grid.over(_base(w, p, hw), batch=vals)
+    rows = []
+    for b, r in zip(batches, run_specs(grid)):
+        m = _metrics(r)
+        rows.append(dict(batch=b, t_sync=m["t_sync_s"],
+                         t_comp=m["t_method_s"], speedup=m["speedup"]))
     return rows
 
 
@@ -48,12 +91,12 @@ def required_compression_sweep(w: pm.Workload, p: int, hw: Hardware,
                                batches: Sequence[int] = (4, 8, 16, 32, 64),
                                ) -> list[dict]:
     """Figs 11/16: compression ratio needed for near-linear scaling."""
-    rows = []
-    for b in batches:
-        wb = cal.batch_scaled(w, b)
-        ratio = pm.required_compression(wb, p, hw)
-        rows.append(dict(batch=b, required_ratio=ratio))
-    return rows
+    from repro.experiments import Grid, workload_fields
+    vals = [dict(batch=b, **workload_fields(cal.batch_scaled(w, b)))
+            for b in batches]
+    grid = Grid.over(_base(w, p, hw), batch=vals)
+    return [dict(batch=b, required_ratio=_metrics(r)["required_ratio"])
+            for b, r in zip(batches, run_specs(grid))]
 
 
 def compute_speedup_sweep(w: pm.Workload, p: int, hw: Hardware,
@@ -61,15 +104,19 @@ def compute_speedup_sweep(w: pm.Workload, p: int, hw: Hardware,
                           speedups: Sequence[float] = (1, 1.5, 2, 2.5, 3, 3.5, 4),
                           ) -> list[dict]:
     """Fig 18: faster compute (encode-decode scales down too), fixed network."""
-    rows = []
+    from repro.experiments import Grid, method_fields, workload_fields
+    vals = []
     for s in speedups:
-        ws = w.scaled_compute(s)
         spec_s = dataclasses.replace(spec,
                                      t_encode_decode=spec.t_encode_decode / s)
-        t_sync = pm.sync_sgd_time(ws, p, hw)
-        t_comp = pm.compressed_time(ws, p, hw, spec_s)
-        rows.append(dict(compute_speedup=s, t_sync=t_sync, t_comp=t_comp,
-                         speedup=t_sync / t_comp))
+        vals.append(dict(**workload_fields(w.scaled_compute(s)),
+                         **method_fields(spec_s)))
+    grid = Grid.over(_base(w, p, hw), compute=vals)
+    rows = []
+    for s, r in zip(speedups, run_specs(grid)):
+        m = _metrics(r)
+        rows.append(dict(compute_speedup=s, t_sync=m["t_sync_s"],
+                         t_comp=m["t_method_s"], speedup=m["speedup"]))
     return rows
 
 
@@ -79,29 +126,31 @@ def encode_tradeoff_sweep(w: pm.Workload, p: int, hw: Hardware,
                           ls: Sequence[int] = (1, 2, 3)) -> list[dict]:
     """Fig 19: divide encode-decode by k while multiplying payload by k^l —
     'any reduction in encode time helps, even at reduced compression'."""
-    rows = []
-    for l in ls:
-        for k in ks:
-            spec_kl = dataclasses.replace(
-                spec,
-                name=f"{spec.name}-k{k:g}l{l}",
+    from repro.experiments import Grid, method_fields
+    kls = [(k, l) for l in ls for k in ks]
+    vals = [method_fields(dataclasses.replace(
+                spec, name=f"{spec.name}-k{k:g}l{l}",
                 t_encode_decode=spec.t_encode_decode / k,
-                payload_bytes=tuple(b * (k ** l) for b in spec.payload_bytes))
-            t = pm.compressed_time(w, p, hw, spec_kl)
-            rows.append(dict(k=k, l=l, t_comp=t,
-                             t_sync=pm.sync_sgd_time(w, p, hw)))
-    return rows
+                payload_bytes=tuple(b * (k ** l)
+                                    for b in spec.payload_bytes)))
+            for k, l in kls]
+    grid = Grid.over(_base(w, p, hw), tradeoff=vals)
+    return [dict(k=k, l=l, t_comp=_metrics(r)["t_method_s"],
+                 t_sync=_metrics(r)["t_sync_s"])
+            for (k, l), r in zip(kls, run_specs(grid))]
 
 
 def scaling_curve(w: pm.Workload, hw: Hardware, spec: pm.CompressionSpec | None,
                   ps: Sequence[int] = (4, 8, 16, 32, 64, 96)) -> list[dict]:
     """Figs 5/6/7: per-iteration time vs #GPUs."""
+    from repro.experiments import Grid
+    grid = Grid.over(_base(w, 1, hw, spec), workers=list(ps))
     rows = []
-    for p in ps:
-        row = dict(p=p, t_linear=pm.linear_scaling_time(w),
-                   t_sync=pm.sync_sgd_time(w, p, hw))
+    for p, r in zip(ps, run_specs(grid)):
+        m = _metrics(r)
+        row = dict(p=p, t_linear=m["t_linear_s"], t_sync=m["t_sync_s"])
         if spec is not None:
-            row["t_comp"] = pm.compressed_time(w, p, hw, spec)
+            row["t_comp"] = m["t_method_s"]
         rows.append(row)
     return rows
 
@@ -111,10 +160,16 @@ def choose_policy(model_bytes: float, t_comp: float, p: int, hw: Hardware,
     """The paper's contribution as a scheduling decision: given a link, pick
     raw syncSGD or the best compression scheme.  Used by the launcher to
     decide per-mesh-axis policy (DESIGN.md §4)."""
+    from repro.experiments import Grid, method_fields
     w = pm.Workload("query", model_bytes, t_comp)
-    best_name, best_t = "none", pm.sync_sgd_time(w, p, hw)
-    for spec in candidate_specs:
-        t = pm.compressed_time(w, p, hw, spec)
-        if t < best_t:
-            best_name, best_t = spec.name, t
+    candidates = list(candidate_specs)
+    grid = Grid.over(_base(w, p, hw),
+                     scheme=[method_fields(c) for c in candidates])
+    results = run_specs(grid)
+    best_name = "none"
+    best_t = _metrics(results[0])["t_sync_s"] if results else \
+        pm.sync_sgd_time(w, p, hw)
+    for c, r in zip(candidates, results):
+        if _metrics(r)["t_method_s"] < best_t:
+            best_name, best_t = c.name, _metrics(r)["t_method_s"]
     return best_name

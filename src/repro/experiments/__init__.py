@@ -1,0 +1,18 @@
+"""The sweep subsystem: ``ExperimentSpec`` → ``Backend`` → ``Runner``.
+
+The paper's 200-setup evaluation matrix as one declarative API — specs are
+frozen/hashable/JSON-round-trippable data, backends evaluate them
+(analytically or by measuring this repo's code), and the runner persists
+and resumes sweeps by spec hash.  See docs/experiments_api.md.
+"""
+from repro.experiments.backend import (AnalyticBackend, Backend,  # noqa: F401
+                                       MeasuredBackend, Result,
+                                       live_method_id,
+                                       make_live_compressor)
+from repro.experiments.report import (headline, headline_rows,  # noqa: F401
+                                      headline_verdicts)
+from repro.experiments.runner import ResultStore, Runner  # noqa: F401
+from repro.experiments.spec import (PAPER_METHODS,  # noqa: F401
+                                    PAPER_WORKER_COUNTS, PAPER_WORKLOADS,
+                                    ExperimentSpec, Grid, hardware_fields,
+                                    method_fields, workload_fields)

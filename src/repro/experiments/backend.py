@@ -1,0 +1,324 @@
+"""Backends: evaluate one ``ExperimentSpec`` into one ``Result``.
+
+Two implementations of the same ``run(spec) -> Result`` contract:
+
+``AnalyticBackend``
+    The paper's performance model (``pm.sync_sgd_time`` /
+    ``pm.compressed_time``), with workload/hardware/method resolution:
+    named paper methods come from the calibration tables, this repo's live
+    compressors come through ``CompressionSpec.for_compressor`` (wire bytes
+    abstract-evaluated from the actual encode path — PR 1's derived
+    accounting), and inline spec fields override everything.
+
+``MeasuredBackend``
+    Live timing of the PR-1 Payload API (encode → reduce → decode under a
+    1-device mesh, collectives as no-ops), and — for ``kind="dryrun"``
+    specs — the HLO-roofline terms from ``artifacts/dryrun`` where dry-run
+    artifacts exist (optionally compiling missing cells).
+
+Both return the same ``Result`` shape so the ``Runner``/``ResultStore``
+and the headline report are backend-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Optional, Protocol, runtime_checkable
+
+from repro.experiments.spec import ExperimentSpec
+
+#: default "meaningful speedup" margin for the win verdict: compression
+#: must beat optimized syncSGD by >5% to count (the paper counts setups
+#: with a *meaningful* end-to-end speedup, not ties).
+WIN_MARGIN = 0.05
+
+
+@dataclasses.dataclass
+class Result:
+    """One evaluated setup.  JSON-lines friendly (one ``to_json`` per
+    ``ResultStore`` row)."""
+    spec: ExperimentSpec
+    backend: str
+    status: str = "ok"                 # "ok" | "error" | "missing"
+    metrics: dict = dataclasses.field(default_factory=dict)
+    error: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    def to_json(self) -> dict:
+        return dict(spec_hash=self.spec.spec_hash(), spec=self.spec.to_json(),
+                    backend=self.backend, status=self.status,
+                    metrics=self.metrics, error=self.error)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Result":
+        return cls(spec=ExperimentSpec.from_json(d["spec"]),
+                   backend=d.get("backend", "?"),
+                   status=d.get("status", "ok"),
+                   metrics=d.get("metrics", {}), error=d.get("error", ""))
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """The backend contract: evaluate one spec.  Implementations must be
+    deterministic in the spec (analytic) or honestly measured; they must
+    never raise on a bad spec — return ``status="error"`` instead, so a
+    sweep survives individual broken cells."""
+    name: str
+
+    def run(self, spec: ExperimentSpec) -> Result: ...
+
+
+# ---------------------------------------------------------------------------
+# analytic
+# ---------------------------------------------------------------------------
+class AnalyticBackend:
+    """The paper's performance model as a backend (§4.1 + App. B)."""
+    name = "analytic"
+
+    def __init__(self, win_margin: float = WIN_MARGIN):
+        self.win_margin = win_margin
+
+    # ---- resolution: spec fields -> perf-model objects ------------------
+    def _workload(self, spec: ExperimentSpec):
+        from repro.core.perfmodel import calibration as cal
+        from repro.core.perfmodel import model as pm
+        if spec.model_bytes > 0:
+            # inline parameters are final — batch is descriptive only
+            return pm.Workload(spec.workload, spec.model_bytes,
+                               spec.t_comp_s)
+        w = cal.WORKLOADS[spec.workload]
+        if spec.batch != 64:
+            w = cal.batch_scaled(w, spec.batch)
+        return w
+
+    def _hardware(self, spec: ExperimentSpec):
+        from repro.core.perfmodel import calibration as cal
+        from repro.core.perfmodel.hardware import PRESETS
+        if spec.hardware in ("paper", "custom"):
+            hw = cal.PAPER_HW
+        else:
+            hw = PRESETS[spec.hardware]
+        repl = {}
+        if spec.net_bw is not None:
+            repl["net_bw"] = spec.net_bw
+        if spec.alpha is not None:
+            repl["alpha"] = spec.alpha
+        if spec.congestion is not None:
+            repl["allgather_congestion"] = spec.congestion
+        if spec.peak_flops is not None:
+            repl["peak_flops"] = spec.peak_flops
+        return dataclasses.replace(hw, **repl) if repl else hw
+
+    def _compression(self, spec: ExperimentSpec, w, hw):
+        """Resolve the method to a perf-model ``CompressionSpec``:
+        inline fields > paper calibration tables > live compressor
+        (payload bytes via ``CompressionSpec.for_compressor``)."""
+        from repro.core.perfmodel import calibration as cal
+        from repro.core.perfmodel import model as pm
+        if spec.payload_bytes is not None:
+            return pm.CompressionSpec(
+                spec.method,
+                spec.t_encode_decode_s or 0.0,
+                spec.payload_bytes,
+                True if spec.associative is None else spec.associative)
+        if spec.method in cal.TABLE2_ENCODE_DECODE_MS:
+            cspec = cal.paper_spec(spec.method, w)
+            if spec.t_encode_decode_s is not None:
+                cspec = dataclasses.replace(
+                    cspec, t_encode_decode=spec.t_encode_decode_s)
+            return cspec
+        if spec.method.startswith("live:"):
+            comp = make_live_compressor(spec.method)
+            n = spec.n_elements or int(w.model_bytes // 4)
+            t_ed = spec.t_encode_decode_s
+            if t_ed is None:
+                # analytical FLOP estimate on this spec's hardware (the
+                # table-2 pattern: matmul-shaped PowerSGD rides the MXU,
+                # everything else is VPU-bound at ~5% of peak)
+                eff = 0.4 if comp.registry_name == "powersgd" else 0.05
+                t_ed = comp.encode_decode_flops(n) / (hw.peak_flops * eff)
+            return pm.CompressionSpec.for_compressor(comp, n, t_ed)
+        raise KeyError(f"unresolvable method {spec.method!r}")
+
+    # ---- evaluation ------------------------------------------------------
+    def run(self, spec: ExperimentSpec) -> Result:
+        from repro.core.perfmodel import model as pm
+        try:
+            w = self._workload(spec)
+            hw = self._hardware(spec)
+            p = spec.workers
+            t_sync = pm.sync_sgd_time(w, p, hw)
+            m = dict(t_linear_s=pm.linear_scaling_time(w),
+                     t_sync_s=t_sync,
+                     gap_s=t_sync - pm.linear_scaling_time(w),
+                     required_ratio=pm.required_compression(w, p, hw))
+            if not spec.is_baseline:
+                cspec = self._compression(spec, w, hw)
+                t = pm.compressed_time(w, p, hw, cspec)
+                m.update(
+                    t_method_s=t,
+                    speedup=t_sync / t,
+                    win=bool(t < t_sync * (1 - self.win_margin)),
+                    ratio=cspec.compression_ratio(w.model_bytes),
+                    associative=bool(cspec.associative))
+            return Result(spec, self.name, metrics=m)
+        except Exception as e:  # bad cell must not kill the sweep
+            return Result(spec, self.name, status="error",
+                          error=f"{type(e).__name__}: {e}")
+
+
+def make_live_compressor(method: str):
+    """Parse ``"live:<name>[:k=v...]"`` into a registered compressor, e.g.
+    ``live:powersgd:rank=8`` or ``live:qsgd:bits=4``."""
+    parts = method.split(":")
+    if parts[0] != "live" or len(parts) < 2:
+        raise ValueError(f"not a live method id: {method!r}")
+    kw: dict[str, Any] = {}
+    for kv in parts[2:]:
+        k, _, v = kv.partition("=")
+        try:
+            kw[k] = int(v)
+        except ValueError:
+            try:
+                kw[k] = float(v)
+            except ValueError:
+                kw[k] = {"true": True, "false": False}.get(v.lower(), v)
+    from repro.core.compression import base as cbase
+    return cbase.make(parts[1], **kw)
+
+
+def live_method_id(name: str, **kw: Any) -> str:
+    """Inverse of ``make_live_compressor`` for building specs."""
+    return ":".join(["live", name] + [f"{k}={v}" for k, v in
+                                      sorted(kw.items())])
+
+
+# ---------------------------------------------------------------------------
+# measured
+# ---------------------------------------------------------------------------
+class MeasuredBackend:
+    """Measure a spec on this repo's own code.
+
+    ``kind="measured"``: per-phase wall times of the Payload API — encode
+    (``encode_and_reduce`` under a 1-device mesh, where the collectives
+    are no-ops; for PowerSGD that includes both rounds and the
+    orthonormalization), decode (collective-free by contract: a plain
+    jitted call), and the full aggregate round-trip — plus the derived
+    wire accounting.
+
+    ``kind="dryrun"``: the HLO-roofline terms for an
+    (arch × shape × mesh × variant) cell, read from the dry-run artifact
+    if it exists, optionally compiled on the spot (``compile_missing`` —
+    expensive: a full AOT lower+compile per cell).  With
+    ``compile_missing=True``, ``reuse_artifacts=False`` forces a fresh
+    compile even when an artifact exists — required after model/plan code
+    changes, since the artifact records only the cell coordinates, not
+    the code that produced it.
+    """
+    name = "measured"
+
+    def __init__(self, reps: int = 5, warmup: int = 2,
+                 art_dir: Optional[str] = None,
+                 compile_missing: bool = False,
+                 reuse_artifacts: bool = True):
+        self.reps = reps
+        self.warmup = warmup
+        self.art_dir = art_dir
+        self.compile_missing = compile_missing
+        self.reuse_artifacts = reuse_artifacts
+
+    def run(self, spec: ExperimentSpec) -> Result:
+        try:
+            if spec.kind == "dryrun":
+                return self._dryrun(spec)
+            return self._live(spec)
+        except Exception as e:
+            return Result(spec, self.name, status="error",
+                          error=f"{type(e).__name__}: {e}")
+
+    # ---- live per-phase timing ------------------------------------------
+    def _time(self, fn, *args) -> float:
+        import jax
+        for _ in range(self.warmup):
+            jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        for _ in range(self.reps):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / self.reps
+
+    def _live(self, spec: ExperimentSpec) -> Result:
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel.compat import make_mesh, shard_map
+
+        comp = make_live_compressor(spec.method)
+        n = spec.n_elements or 1 << 20
+        mesh = make_mesh((1,), ("data",))
+        g = jax.random.normal(jax.random.key(0), (n,))
+        st = comp.init_state(n, jax.random.key(1))
+        st_spec = jax.tree.map(lambda _: P(), st)
+
+        f_all = jax.jit(shard_map(
+            lambda b, s: comp.aggregate(b, s, ("data",)),
+            mesh, in_specs=(P(None), st_spec), out_specs=(P(None), st_spec)))
+        f_prep = jax.jit(shard_map(
+            lambda b, s: comp.encode_and_reduce(b, s, ("data",)),
+            mesh, in_specs=(P(None), st_spec), out_specs=P()))
+        payload = f_prep(g, st)
+
+        t_enc = self._time(f_prep, g, st)
+        t_dec = self._time(jax.jit(lambda pl, b, s: comp.decode(pl, b, s)),
+                           payload, g, st)
+        t_all = self._time(f_all, g, st)
+        m = dict(method=comp.name, n=n,
+                 t_encode_us=round(t_enc * 1e6, 1),
+                 t_decode_us=round(t_dec * 1e6, 1),
+                 us_per_call=round(t_all * 1e6, 1),
+                 wire_bytes=int(comp.compressed_bytes(n)),
+                 rounds=len(comp.wire_round_bytes(n)),
+                 associative=comp.associative,
+                 ratio=round(comp.compression_ratio(n), 1))
+        return Result(spec, self.name, metrics=m)
+
+    # ---- dry-run roofline terms -----------------------------------------
+    def _artifact_path(self, spec: ExperimentSpec) -> str:
+        from repro.launch import dryrun
+        art = self.art_dir or dryrun.ART_DIR
+        v = f"__{spec.variant}" if spec.variant else ""
+        return os.path.join(
+            art, f"{spec.workload}__{spec.shape}__{spec.mesh}{v}.json")
+
+    def _dryrun(self, spec: ExperimentSpec) -> Result:
+        path = self._artifact_path(spec)
+        rec = None
+        if os.path.exists(path) and (self.reuse_artifacts
+                                     or not self.compile_missing):
+            with open(path) as f:
+                rec = json.load(f)
+        elif self.compile_missing:
+            from repro.launch import dryrun
+            rec = dryrun.run_cell(
+                spec.workload, spec.shape, spec.mesh,
+                out_dir=self.art_dir or dryrun.ART_DIR,
+                plan_overrides=dict(spec.overrides), variant=spec.variant)
+        if rec is None:
+            return Result(spec, self.name, status="missing",
+                          error=f"no dry-run artifact at {path}")
+        if rec.get("status") != "ok":
+            return Result(spec, self.name, status="error",
+                          error=rec.get("error", rec.get("reason", "?")))
+        rl = rec["roofline"]
+        m = dict(compute_s=rl["compute_s"], memory_s=rl["memory_s"],
+                 ici_s=rl["ici_s"], dcn_s=rl["dcn_s"],
+                 collective_s=rl.get("collective_s"),
+                 dominant=rl["dominant"],
+                 roofline_fraction=rl["roofline_fraction"],
+                 bytes_per_device=rl["bytes_per_device"],
+                 fits_hbm=rec.get("fits_hbm"))
+        return Result(spec, self.name, metrics=m)

@@ -36,7 +36,8 @@ class TrainerConfig:
     keep_ckpts: int = 3
     sync_every: int = 1               # local-SGD pod-sync period
     accum: int = 1
-    schedule: sched_mod.ScheduleConfig = sched_mod.ScheduleConfig()
+    schedule: sched_mod.ScheduleConfig = dataclasses.field(
+        default_factory=sched_mod.ScheduleConfig)
 
 
 class Trainer:
