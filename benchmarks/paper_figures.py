@@ -69,19 +69,42 @@ def table2_encode_decode():
     return rows, verdicts
 
 
-def fig2_overlap_effect():
-    """Paper Fig 2: overlap reduces iteration time (ResNet-50, 64 GPUs)."""
+def fig2_overlap_effect(measured: dict | None = None):
+    """Paper Fig 2: overlap reduces iteration time (ResNet-50, 64 GPUs).
+
+    Analytic rows always; pass ``measured`` (a ``kind="train"``
+    ``MeasuredBackend`` metrics dict from ``repro.train.overlap_bench``)
+    to append the *executed* serial-vs-overlapped step times and gate on
+    them — the serial strawman and the overlapped schedule are the same
+    program issue-ordered differently, so their gap is pure exposed
+    comm."""
     w = cal.RESNET50
     p = 64
     t_overlap = pm.sync_sgd_time(w, p, HW)
     # no overlap: backward + full serial all-reduce
-    t_serial = w.t_comp + costs.ring_all_reduce(w.model_bytes, p,
-                                                HW.net_bw, HW.alpha)
+    t_serial = pm.sync_sgd_serial_time(w, p, HW)
     saving = 1 - t_overlap / t_serial
-    rows = [dict(t_serial_ms=t_serial * 1e3, t_overlap_ms=t_overlap * 1e3,
-                 saving_pct=saving * 100)]
+    rows = [dict(source="analytic", t_serial_ms=t_serial * 1e3,
+                 t_overlap_ms=t_overlap * 1e3, saving_pct=saving * 100)]
     verdicts = [("overlap saving (paper: up to 46%)",
                  f"{saving * 100:.0f}%", "~46%", 0.25 <= saving <= 0.6)]
+    if measured is not None:
+        m_saving = measured["fig2_saving_pct"]
+        ratio = measured["overlap_vs_serial"]
+        rows.append(dict(source=f"measured:{measured['arch']}"
+                                f"/p{measured['workers']}",
+                         t_serial_ms=measured["t_serial_us"] / 1e3,
+                         t_overlap_ms=measured["t_overlap_us"] / 1e3,
+                         t_unfused_ms=measured["t_unfused_us"] / 1e3,
+                         saving_pct=m_saving))
+        # CPU smoke meshes expose no real link latency, so the measured
+        # saving is small; the gate is that fusing the collectives into
+        # the backward never costs step time (<=5% timer noise allowed —
+        # CI runners time-share the 4 fake devices on ~2 vCPUs).
+        verdicts.append((
+            "measured overlapped step <= serial step (CPU smoke mesh)",
+            f"{ratio:.3f}x (saving {m_saving:.1f}%)", "<= 1.0x (+5% noise)",
+            ratio <= 1.05))
     return rows, verdicts
 
 

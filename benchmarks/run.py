@@ -43,12 +43,23 @@ def main(argv=None) -> None:
 
     bench_rows: list[dict] = []
     failures = 0
+
+    print("=" * 72)
+    print("MEASURED OVERLAP (serial vs overlapped DDP step, 4-device "
+          "host mesh)")
+    print("=" * 72)
+    measured_overlap = _measure_overlap(bench_rows)
+    if measured_overlap is None:
+        failures += 1
+
     print("=" * 72)
     print("PAPER FIGURES / TABLES (performance model + anchor checks)")
     print("=" * 72)
     for name, fn in paper_figures.ALL.items():
         kw = ({"store": args.store or None}
               if name == "headline_200_setups" else {})
+        if name == "fig2_overlap_effect":
+            kw = {"measured": measured_overlap}
         t0 = time.time()
         rows, verdicts = fn(**kw)
         us = (time.time() - t0) * 1e6
@@ -93,6 +104,31 @@ def main(argv=None) -> None:
     print(f"\nbench_total,{total_us:.0f},anchor_failures={failures}")
     if failures:
         sys.exit(1)
+
+
+def _measure_overlap(bench_rows: list[dict]):
+    """Run the ``kind="train"`` measured serial-vs-overlapped comparison
+    (one ``repro.train.overlap_bench`` subprocess via the
+    ``MeasuredBackend``) and append its BENCH trajectory row.  Returns
+    the metrics dict for ``fig2_overlap_effect``, or None on failure
+    (counted as an anchor failure by the caller)."""
+    from repro.experiments import ExperimentSpec, MeasuredBackend, Runner
+    spec = ExperimentSpec(workload="tinyllama-1.1b", method="none",
+                          workers=4, batch=8, hardware="cpu-host",
+                          kind="train", overlap=True)
+    res = Runner(MeasuredBackend()).run([spec])[0]
+    if not res.ok:
+        print(f"  [FAIL] measured overlap sweep: {res.error}")
+        bench_rows.append(dict(bench="overlap", status=res.status,
+                               error=res.error))
+        return None
+    m = res.metrics
+    print(f"  {m['arch']} method={m['method']} p={m['workers']} "
+          f"buckets={m['n_buckets']}: serial={m['t_serial_us']}us "
+          f"overlap={m['t_overlap_us']}us unfused={m['t_unfused_us']}us "
+          f"(saving {m['fig2_saving_pct']}%)")
+    bench_rows.append(dict(bench="overlap", **m))
+    return m
 
 
 def _write_bench(rows: list[dict], out: str | None) -> None:

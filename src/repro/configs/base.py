@@ -67,6 +67,11 @@ class ParallelPlan:
     qsgd_bits: int = 8
     error_feedback: bool = True
     bucket_mb: int = 25           # DDP bucket size (paper: PyTorch default 25MB)
+    # DDP only: fuse reverse-order bucketed aggregation into the backward
+    # pass (leaf-aligned buckets + segmented per-block vjp; the paper's
+    # optimized-syncSGD baseline, §2.2).  repro.train.overlap; degrades to
+    # the serial schedule for non-associative compressors (Table 3).
+    overlap: bool = False
     # training parameter storage dtype.  "bfloat16" = T5X-style low-memory
     # training (bf16 weights + fp32 adafactor stats) — what makes
     # arctic-480b's 1.9 TB of fp32 masters unnecessary (DESIGN.md §5).

@@ -78,18 +78,24 @@ class GradAggregator:
         return cbase.reduce_payload(payload, axes)
 
     # ---------- DDP path ----------
+    def aggregate_bucket_list(self, buckets, states):
+        """THE bucket loop (single code path for the classic step, the
+        bucketed wrapper below, and the unfused strawman): each bucket
+        through ``aggregate_one``.  ``states`` may be empty for stateless
+        compressors.  Returns (out_buckets, new_states)."""
+        outs, news = [], []
+        for i, b in enumerate(buckets):
+            ob, ns = self.aggregate_one(b, states[i] if states else ())
+            outs.append(ob)
+            news.append(ns)
+        return outs, tuple(news)
+
     def aggregate_bucketed(self, grads, states, layout):
         """grads: local gradient pytree (replicated params).  Returns the
         aggregated pytree + new compressor states."""
         buckets = bucketing.to_buckets(grads, layout)
-        new_states = []
-        out_buckets = []
-        for i, b in enumerate(buckets):
-            b, st = self.aggregate_one(b, states[i])
-            out_buckets.append(b)
-            new_states.append(st)
-        out = bucketing.from_buckets(out_buckets, grads, layout)
-        return out, tuple(new_states)
+        outs, news = self.aggregate_bucket_list(buckets, states)
+        return bucketing.from_buckets(outs, grads, layout), news
 
     def aggregate_one(self, bucket: jax.Array, state: Any):
         """One bucket through the three-phase pipeline:

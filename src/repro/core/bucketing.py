@@ -1,15 +1,29 @@
 """Gradient bucketing — the PyTorch-DDP "25 MB bucket" mechanism (paper §2.2).
 
-A gradient pytree is raveled into one flat vector and split into fixed-byte
-buckets.  Aggregation (raw all-reduce or a compressor) runs per bucket; the
-result is unraveled back to the original pytree.  Bucket boundaries are purely
-byte-based (layer-agnostic), matching PyTorch DDP's behaviour that the paper
-benchmarks.
+Two layout families share one :class:`BucketLayout` type:
+
+``layout_for(tree, bucket_mb)``
+    Byte-based boundaries (layer-agnostic): the gradient pytree is raveled
+    into one flat vector and split into fixed-byte buckets.  This is the
+    historical executable path and what the ZeRO-1 flat optimizer shards.
+
+``layout_for(tree, bucket_mb, leaf_aligned=True)``
+    PyTorch-DDP-style *leaf-aligned* boundaries: buckets are greedy runs of
+    whole leaves, closed when the byte target is reached, with a recorded
+    leaf -> bucket map (``leaf_bucket``).  Because no leaf straddles a
+    boundary, a bucket is well-defined the moment its layers' grads are
+    final — the property the overlap subsystem (``repro.train.overlap``)
+    needs to issue a bucket's collective while earlier layers' backward is
+    still running.  ``to_buckets`` builds each bucket from per-leaf views
+    (no whole-gradient concatenate).
+
+Aggregation (raw all-reduce or a compressor) runs per bucket either way;
+the result is unraveled back to the original pytree.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,27 +34,93 @@ import numpy as np
 class BucketLayout:
     """Static description of how a pytree maps onto buckets."""
     n_elements: int            # total (unpadded) element count
-    bucket_elems: int          # elements per full bucket
+    bucket_elems: int          # elements per full bucket (byte target)
     n_buckets: int
     dtype: Any
     sizes: tuple[int, ...]     # per-bucket element counts (last may be short)
+    # leaf-aligned layouts only (None => byte-based boundaries):
+    leaf_sizes: tuple[int, ...] | None = None    # per-leaf element counts
+    leaf_bucket: tuple[int, ...] | None = None   # leaf index -> bucket index
 
     @property
     def last_elems(self) -> int:
         return self.sizes[-1]
 
+    @property
+    def leaf_aligned(self) -> bool:
+        return self.leaf_sizes is not None
 
-def layout_for(tree, bucket_mb: float) -> BucketLayout:
+    def bucket_leaves(self, b: int) -> tuple[int, int]:
+        """Half-open leaf-index range [lo, hi) owned by bucket ``b``
+        (leaf-aligned layouts only; buckets own contiguous leaf runs)."""
+        assert self.leaf_bucket is not None
+        lo = self.leaf_bucket.index(b)
+        hi = lo
+        while hi < len(self.leaf_bucket) and self.leaf_bucket[hi] == b:
+            hi += 1
+        return lo, hi
+
+
+def _majority_dtype(leaves) -> Any:
     """Bucket dtype = the dtype holding the most bytes (mixed-precision
     trees — bf16 working params + a few fp32 scalars under ZeRO-1 — ride
     the majority dtype; minority leaves round-trip through it)."""
-    leaves = jax.tree_util.tree_leaves(tree)
-    assert leaves, "empty gradient tree"
     by_dtype: dict = {}
     for l in leaves:
         by_dtype[jnp.dtype(l.dtype)] = by_dtype.get(jnp.dtype(l.dtype), 0) \
             + int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
-    dtype = max(by_dtype, key=by_dtype.get)
+    return max(by_dtype, key=by_dtype.get)
+
+
+def leaf_aligned_sizes(leaf_sizes: Sequence[int], bucket_elems: int
+                       ) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Greedy leaf -> bucket assignment: walk leaves in order, close the
+    current bucket once it holds >= ``bucket_elems`` elements.  Every
+    bucket owns at least one whole leaf (a leaf bigger than the target
+    gets its own bucket); no leaf straddles a boundary.
+
+    Returns (per-bucket element counts, leaf index -> bucket index).
+    """
+    sizes: list[int] = []
+    leaf_bucket: list[int] = []
+    acc = 0
+    for s in leaf_sizes:
+        if acc >= bucket_elems and acc > 0:
+            sizes.append(acc)
+            acc = 0
+        leaf_bucket.append(len(sizes))
+        acc += int(s)
+    # close the open bucket whenever a leaf was assigned to it — even a
+    # zero-size trailing leaf must land in a bucket that exists
+    if (leaf_bucket and leaf_bucket[-1] == len(sizes)) or not sizes:
+        sizes.append(acc)
+    return tuple(sizes), tuple(leaf_bucket)
+
+
+def layout_from_leaf_sizes(leaf_sizes: Sequence[int], dtype,
+                           bucket_mb: float) -> BucketLayout:
+    """Leaf-aligned layout over an explicit ordered leaf-size list (the
+    overlap subsystem orders leaves by backward-completion, which is not
+    the pytree order — so it builds layouts from sizes directly)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    bucket_elems = max(1, int(bucket_mb * 2**20) // itemsize)
+    sizes, leaf_bucket = leaf_aligned_sizes(leaf_sizes, bucket_elems)
+    return BucketLayout(int(sum(leaf_sizes)), bucket_elems, len(sizes),
+                        dtype, sizes, leaf_sizes=tuple(int(s) for s
+                                                       in leaf_sizes),
+                        leaf_bucket=leaf_bucket)
+
+
+def layout_for(tree, bucket_mb: float,
+               leaf_aligned: bool = False) -> BucketLayout:
+    """Layout for a pytree: byte-based boundaries by default, or
+    leaf-aligned (PyTorch-DDP style) with ``leaf_aligned=True``."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    assert leaves, "empty gradient tree"
+    dtype = _majority_dtype(leaves)
+    if leaf_aligned:
+        return layout_from_leaf_sizes(
+            [int(np.prod(l.shape)) for l in leaves], dtype, bucket_mb)
     n = sum(int(np.prod(l.shape)) for l in leaves)
     itemsize = jnp.dtype(dtype).itemsize
     bucket_elems = max(1, int(bucket_mb * 2**20) // itemsize)
@@ -50,11 +130,45 @@ def layout_for(tree, bucket_mb: float) -> BucketLayout:
     return BucketLayout(n, bucket_elems, n_buckets, dtype, tuple(sizes))
 
 
+def leaves_to_buckets(leaves: Sequence[jax.Array],
+                      layout: BucketLayout) -> list[jax.Array]:
+    """Leaf-aligned assembly: each bucket is the concatenation of ITS
+    leaves only — per-bucket views, never a whole-gradient flat vector."""
+    assert layout.leaf_sizes is not None and layout.leaf_bucket is not None
+    assert len(leaves) == len(layout.leaf_sizes), \
+        (len(leaves), len(layout.leaf_sizes))
+    per_bucket: list[list[jax.Array]] = [[] for _ in range(layout.n_buckets)]
+    for l, b in zip(leaves, layout.leaf_bucket):
+        per_bucket[b].append(l.reshape(-1).astype(layout.dtype))
+    return [parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            for parts in per_bucket]
+
+
+def buckets_to_leaves(buckets: Sequence[jax.Array], leaves_like,
+                      layout: BucketLayout) -> list[jax.Array]:
+    """Inverse of :func:`leaves_to_buckets`: split each bucket back into
+    its leaves (shapes/dtypes from ``leaves_like``, same order)."""
+    assert layout.leaf_sizes is not None and layout.leaf_bucket is not None
+    out, off, cur = [], 0, 0
+    for like, b in zip(leaves_like, layout.leaf_bucket):
+        if b != cur:
+            cur, off = b, 0
+        size = int(np.prod(like.shape))
+        part = jax.lax.dynamic_slice_in_dim(buckets[b], off, size)
+        out.append(part.reshape(like.shape).astype(like.dtype))
+        off += size
+    return out
+
+
 def to_buckets(tree, layout: BucketLayout) -> list[jax.Array]:
-    """Ravel a pytree into its list of 1-D buckets (cast to bucket dtype)."""
+    """Ravel a pytree into its list of 1-D buckets (cast to bucket dtype).
+    Leaf-aligned layouts build each bucket from per-leaf views; byte-based
+    layouts slice one flat concatenation."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if layout.leaf_aligned:
+        return leaves_to_buckets(leaves, layout)
     flat = jnp.concatenate(
-        [l.reshape(-1).astype(layout.dtype)
-         for l in jax.tree_util.tree_leaves(tree)])
+        [l.reshape(-1).astype(layout.dtype) for l in leaves])
     assert flat.shape[0] == layout.n_elements
     out, off = [], 0
     for s in layout.sizes:
@@ -65,8 +179,11 @@ def to_buckets(tree, layout: BucketLayout) -> list[jax.Array]:
 
 def from_buckets(buckets: list[jax.Array], tree_like, layout: BucketLayout):
     """Inverse of :func:`to_buckets` (shapes/dtypes from ``tree_like``)."""
-    flat = jnp.concatenate([b.astype(layout.dtype) for b in buckets])
     leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    if layout.leaf_aligned:
+        return jax.tree_util.tree_unflatten(
+            treedef, buckets_to_leaves(buckets, leaves, layout))
+    flat = jnp.concatenate([b.astype(layout.dtype) for b in buckets])
     out, off = [], 0
     for l in leaves:
         size = int(np.prod(l.shape))

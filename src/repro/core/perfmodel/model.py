@@ -85,6 +85,17 @@ def sync_sgd_time(w: Workload, p: int, hw: Hardware,
     return max(gamma * w.t_comp, overlapped) + tail
 
 
+def sync_sgd_serial_time(w: Workload, p: int, hw: Hardware) -> float:
+    """syncSGD *without* overlap (paper Fig 2's strawman): the full
+    backward, then one serial all-reduce of the whole gradient.  The
+    executable mirror is ``repro.train.overlap``'s serial/unfused
+    schedules."""
+    if p <= 1:
+        return w.t_comp
+    return w.t_comp + costs.ring_all_reduce(w.model_bytes, p, hw.net_bw,
+                                            hw.alpha)
+
+
 def compressed_time(w: Workload, p: int, hw: Hardware,
                     spec: CompressionSpec) -> float:
     """Gradient-compression per-iteration time (paper App. B).

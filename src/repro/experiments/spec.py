@@ -60,8 +60,15 @@ class ExperimentSpec:
                     "tpu-v5e") or "custom" (inline overrides carry it).
       ``compress_axes``  which DP mesh axes the compressor runs on
                     ("pod" = the paper's compress-the-slow-link policy).
-      ``kind``      "analytic" | "measured" | "dryrun" — which backend
-                    family can evaluate it.
+      ``kind``      "analytic" | "measured" | "dryrun" | "train" — which
+                    backend family can evaluate it ("train" = the
+                    measured serial-vs-overlapped DDP step comparison,
+                    run on a forced multi-device host mesh).
+      ``overlap``   the baseline-overlap knob (repro.train.overlap).
+                    ``None`` = the paper's optimized overlapped baseline
+                    (historic behaviour); ``False`` = the serial
+                    no-overlap strawman (analytic: Fig-2 serial time;
+                    train: reported either way).
 
     Inline overrides (None/0 = resolve from the calibration registry):
       workload: ``model_bytes``, ``t_comp_s``;
@@ -81,6 +88,7 @@ class ExperimentSpec:
     hardware: str = "paper"
     compress_axes: str = "pod"
     kind: str = "analytic"
+    overlap: Optional[bool] = None
     # -- inline workload parameters (0.0 = resolve by name) --
     model_bytes: float = 0.0
     t_comp_s: float = 0.0

@@ -5,7 +5,10 @@ the encode/decode hot spot of the paper's 32× scheme (§3.2).
 block (VPU integer ops; the 32-lane minor dim rides the vector lanes).
 ``popcount_votes``: a (p, words) gathered bitmap -> per-element positive
 vote counts; the unpack + popcount runs blocked over words with the full
-worker dim resident (p ≤ 512 → ≤ 1 MB/block).
+worker dim resident, accumulating one bit position at a time so the live
+set per block is one (p, bw) plane + the (bw, 32) output — never the
+(p, bw, 32) bit-plane tensor (a 32× VMEM cut on the planes, ~64× counting
+their int32 copies; p = 512, bw = 1024 → ~2 MB in + ~4 MB transients).
 """
 from __future__ import annotations
 
@@ -57,13 +60,16 @@ def pack_signs(g: jax.Array, *, bw: int = 2048,
 # --------------------------------------------------------------------------
 def _votes_kernel(w_ref, o_ref):
     w = w_ref[...]                                          # (p, bw) u32
-    shifts = jax.lax.broadcasted_iota(jnp.uint32, (w.shape[1], 32), 1)
-    # (p, bw, 32) bit planes, summed over workers
-    bits = (w[:, :, None] >> shifts[None]) & jnp.uint32(1)
-    o_ref[...] = jnp.sum(bits.astype(jnp.int32), axis=0)    # (bw, 32)
+    # accumulate per bit position: each iteration touches one (p, bw)
+    # plane, never the full (p, bw, 32) bit-plane tensor
+    cols = []
+    for b in range(32):
+        bits = (w >> jnp.uint32(b)) & jnp.uint32(1)         # (p, bw)
+        cols.append(jnp.sum(bits.astype(jnp.int32), axis=0))  # (bw,)
+    o_ref[...] = jnp.stack(cols, axis=1)                    # (bw, 32)
 
 
-def popcount_votes(gathered: jax.Array, n: int, *, bw: int = 512,
+def popcount_votes(gathered: jax.Array, n: int, *, bw: int = 1024,
                    interpret: bool = False) -> jax.Array:
     """gathered: (p, words) u32 -> (n,) int32 count of positive votes."""
     p, words = gathered.shape

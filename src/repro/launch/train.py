@@ -26,6 +26,9 @@ def main(argv=None):
     ap.add_argument("--compression", default=None,
                     help="none|powersgd|signsgd|mstopk|randomk|qsgd|terngrad")
     ap.add_argument("--compress-axes", default=None, choices=["pod", "all"])
+    ap.add_argument("--overlap", action="store_true",
+                    help="DDP: fuse reverse-order bucketed aggregation "
+                         "into the backward pass (repro.train.overlap)")
     ap.add_argument("--sync-every", type=int, default=1)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
@@ -36,7 +39,12 @@ def main(argv=None):
 
     if args.mesh == "test" and args.devices:
         os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices}")
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+    if args.overlap:
+        # latency-hiding-scheduler flags must precede jax init (TPU only)
+        from repro.train.overlap import enable_overlap_flags
+        enable_overlap_flags()
 
     import jax
     import jax.numpy as jnp
@@ -67,10 +75,27 @@ def main(argv=None):
         overrides["compression"] = args.compression
     if args.compress_axes:
         overrides["compress_axes"] = args.compress_axes
+    if args.overlap:
+        # overlap is DDP-only without ZeRO-1; say so when we flip the
+        # arch's own plan instead of silently benchmarking a different
+        # configuration than the arch name suggests
+        forced = {k: v for k, v in
+                  dict(dp_mode="ddp", zero1=False).items()
+                  if getattr(arch.plan, k) != v}
+        if forced:
+            print(f"[train] --overlap forces {forced} "
+                  f"(arch plan had dp_mode={arch.plan.dp_mode!r}, "
+                  f"zero1={arch.plan.zero1})")
+        overrides.update(overlap=True, **dict(dp_mode="ddp", zero1=False))
     setup = ts.build(arch, mesh, **overrides)
+    sched = ""
+    if setup.overlap:
+        from repro.train import overlap as overlap_mod
+        sched = f" overlap={overlap_mod.effective_schedule(setup)}"
     print(f"[train] arch={arch.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"dp_mode={arch.plan.dp_mode} fsdp={setup.fsdp_axes} "
-          f"agg={setup.agg_cfg.compressor}@{setup.agg_cfg.compress_axes}")
+          f"agg={setup.agg_cfg.compressor}@{setup.agg_cfg.compress_axes}"
+          f"{sched}")
 
     data = Pipeline(DataConfig(vocab=arch.vocab, seq_len=args.seq,
                                global_batch=args.batch, seed=args.seed))

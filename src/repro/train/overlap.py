@@ -1,0 +1,571 @@
+"""Overlapped bucketed gradient aggregation — the paper's *optimized*
+syncSGD baseline (§2.2, Fig 2), executable.
+
+The analytic model has always credited the baseline with overlap
+(``sync_sgd_time = max(compute, overlapped comm) + tail``), but the classic
+train step computes the full backward and only then issues every bucket
+collective — the serial strawman the paper warns against.  This module
+closes that model-vs-execution gap:
+
+  1. The model's block structure is split into per-block ``jax.vjp``
+     stages (forward saves one vjp closure per block; backward replays
+     them in reverse layer order).
+  2. Gradients are bucketed with the *leaf-aligned* layout
+     (``bucketing.layout_for(..., leaf_aligned=True)`` over leaves ordered
+     by backward completion: block L-1 first, block 0 next-to-last, then
+     the embed/head/shared tail).  Because bucket boundaries snap to leaf
+     edges, a bucket is fully determined the moment its layers' grads are
+     final.
+  3. Under ``schedule="overlap"`` each completed bucket's
+     ``encode -> reduce -> decode`` is issued immediately, *between* block
+     backward stages, pinned in program order with
+     ``jax.lax.optimization_barrier`` so XLA cannot sink the collectives
+     behind the remaining backward; the latency-hiding-scheduler flags
+     (:data:`XLA_OVERLAP_FLAGS`) then hide each collective under the next
+     stage's compute.  ``schedule="serial"`` runs the *same* segmented
+     backward and the *same* per-bucket aggregation but issues every
+     collective after the full backward — the two schedules are
+     bit-identical in results and differ only in issue order, which is
+     what makes serial-vs-overlapped step time a pure exposed-comm
+     measurement.
+
+Non-associative schemes (signsgd/qsgd/terngrad/mstopk) cannot ride the
+overlapped all-reduce pipeline — their all-gather payload needs every
+peer's tensors before *any* decode can complete, and their wire cost grows
+with p, so pipelining buckets buys nothing (paper Table 3 / Takeaway 1).
+``make_step(schedule="overlap")`` therefore degrades them to the serial
+schedule; ``effective_schedule(setup)`` reports the degradation — the
+paper's claim, made executable.
+
+Supported: DDP (no FSDP transpose to interleave with), ``zero1=False``,
+``accum == 1``, families whose train stack is one scanned block collection
+(dense/vlm/moe via ``params["blocks"]``, hybrid/ssm via
+``params["groups"]``).  ``check_supported`` raises with the reason
+otherwise.  See docs/overlap.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import aggregator as agg_mod
+from repro.core import bucketing
+
+#: XLA flags that let the latency-hiding scheduler overlap the pinned
+#: collectives with backward compute (TPU; harmless elsewhere).  Must be in
+#: XLA_FLAGS *before* jax initializes — see :func:`enable_overlap_flags`.
+XLA_OVERLAP_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_reduce=true")
+
+#: families whose training stack is a single scanned block collection.
+_STACK_KEYS = {"dense": "blocks", "vlm": "blocks", "moe": "blocks",
+               "hybrid": "groups", "ssm": "groups"}
+
+
+def enable_overlap_flags(tpu: Optional[bool] = None) -> None:
+    """Append :data:`XLA_OVERLAP_FLAGS` to ``XLA_FLAGS`` (idempotent).
+    Call before the first jax import — flags set later are ignored.
+    No-op off-TPU: XLA *aborts the process* on unknown ``--xla_tpu_*``
+    flags, and CPU/GPU have no latency-hiding scheduler to enable.
+
+    ``tpu=None`` auto-detects pre-jax-init: an explicit ``JAX_PLATFORMS``
+    wins; otherwise a TPU is assumed only when BOTH libtpu is importable
+    and a ``/dev/accel*`` device node exists (libtpu alone is just a
+    wheel — CPU containers ship it too, and the flags would abort there).
+    """
+    import glob
+    import importlib.util
+    import os
+    if tpu is None:
+        env = os.environ.get("JAX_PLATFORMS", "").lower()
+        if env:
+            tpu = "tpu" in env
+        else:
+            tpu = (importlib.util.find_spec("libtpu") is not None
+                   and bool(glob.glob("/dev/accel*")))
+    if not tpu:
+        return
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "latency_hiding_scheduler" not in cur:
+        os.environ["XLA_FLAGS"] = (cur + " " + XLA_OVERLAP_FLAGS).strip()
+
+
+# --------------------------------------------------------------------------
+# support gating
+# --------------------------------------------------------------------------
+def supports(arch, plan) -> tuple[bool, str]:
+    """Can (arch, plan) run the segmented overlapped step?"""
+    if plan.dp_mode != "ddp":
+        return False, ("overlap interleaves DDP bucket collectives; FSDP's "
+                       "per-layer reduce-scatter already overlaps via the "
+                       "all_gather AD transpose")
+    if plan.zero1:
+        return False, "zero1 shards the byte-based flat buckets; " \
+                      "leaf-aligned overlap buckets are not supported yet"
+    if arch.family not in _STACK_KEYS:
+        return False, f"family {arch.family!r} has no single scanned " \
+                      "block stack to segment"
+    return True, ""
+
+
+def check_supported(arch, plan) -> None:
+    ok, why = supports(arch, plan)
+    if not ok:
+        raise ValueError(f"plan.overlap unsupported for {arch.name}: {why}")
+
+
+def effective_schedule(setup) -> str:
+    """The schedule ``make_step(schedule="overlap")`` actually runs:
+    ``"serial"`` when the compressor's payload is non-associative (the
+    all-gather round cannot pipeline — paper Table 3), else
+    ``"overlap"``."""
+    if setup.agg_cfg.compressor == "none":
+        return "overlap"
+    if not setup.agg_cfg.compress_axes and not setup.agg_cfg.raw_axes:
+        return "overlap"      # no collectives at all; schedule is moot
+    return "overlap" if setup.agg_cfg.build().associative else "serial"
+
+
+# --------------------------------------------------------------------------
+# layout: leaves ordered by backward completion
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class OverlapLayout:
+    """Leaf-aligned bucket layout over backward-completion-ordered leaves.
+
+    Leaf order: block L-1's leaves, ..., block 0's leaves, then the tail
+    (everything outside the stacked collection: embed, final norm, lm
+    head, hybrid shared block).  Stage s (0-based) is the backward of
+    block L-1-s; stage L is the tail (grads of embed/head/shared are only
+    final once the whole backward — including the embedding lookup's
+    transpose — has run).
+    """
+    layout: bucketing.BucketLayout
+    stack_key: str
+    n_stages: int                 # L block stages (tail stage index == L)
+    n_block_leaves: int           # leaves per block slice
+    bucket_ready: tuple[int, ...]  # bucket -> stage after which complete
+
+    def stage_leaf_range(self, s: int) -> tuple[int, int]:
+        """Half-open ordered-leaf range written by stage ``s``."""
+        nb = self.n_block_leaves
+        if s < self.n_stages:
+            return s * nb, (s + 1) * nb
+        return self.n_stages * nb, len(self.layout.leaf_sizes)
+
+    def buckets_ready_at(self, s: int) -> list[int]:
+        return [b for b, r in enumerate(self.bucket_ready) if r == s]
+
+
+def _split_params(params: dict, stack_key: str):
+    rest = {k: v for k, v in params.items() if k != stack_key}
+    return rest, params[stack_key]
+
+
+def build_layout(setup) -> OverlapLayout:
+    """The overlap layout for a TrainSetup (shapes from the same local
+    gradient tree the classic byte-based layout uses)."""
+    import numpy as np
+
+    from repro.train import train_step as ts
+    check_supported(setup.arch, setup.arch.plan)
+    grads_like = ts._grads_like_local(setup)
+    stack_key = _STACK_KEYS[setup.arch.family]
+    rest, stacked = _split_params(grads_like, stack_key)
+    stacked_leaves = jax.tree_util.tree_leaves(stacked)
+    n_stages = stacked_leaves[0].shape[0]
+    block_sizes = [int(np.prod(l.shape[1:])) for l in stacked_leaves]
+    tail_sizes = [int(np.prod(l.shape))
+                  for l in jax.tree_util.tree_leaves(rest)]
+    leaf_sizes = block_sizes * n_stages + tail_sizes
+    dtype = bucketing._majority_dtype(jax.tree_util.tree_leaves(grads_like))
+    layout = bucketing.layout_from_leaf_sizes(leaf_sizes, dtype,
+                                              setup.agg_cfg.bucket_mb)
+    nb = len(block_sizes)
+
+    def stage_of(leaf_idx: int) -> int:
+        return min(leaf_idx // nb, n_stages) if nb else n_stages
+
+    ready = []
+    for b in range(layout.n_buckets):
+        lo, hi = layout.bucket_leaves(b)
+        ready.append(stage_of(hi - 1))
+    return OverlapLayout(layout, stack_key, n_stages, nb, tuple(ready))
+
+
+# --------------------------------------------------------------------------
+# the segmented step
+# --------------------------------------------------------------------------
+def _make_aux(batch):
+    """Batch-only position info (mirrors Model._embed_in's Aux)."""
+    from repro.models.transformer import Aux
+    ref = batch["embeds"] if "embeds" in batch else batch["tokens"]
+    bsz, s_full = ref.shape[0], ref.shape[1]
+    positions = batch.get(
+        "positions", jnp.broadcast_to(jnp.arange(s_full), (bsz, s_full)))
+    return Aux(positions=positions,
+               mrope_positions=batch.get("mrope_positions"))
+
+
+def _stage_fns(setup, batch, xent_chunk: int):
+    """(f_in, block, f_out, has_aux, has_shared) — each block stage is the
+    exact remat-wrapped body the serial scan runs, so the segmented
+    backward reproduces the scanned backward's math."""
+    from repro.models import moe as moe_mod
+    from repro.models import transformer as tf
+    from repro.models.model import _remat
+    from repro.models.transformer import StepState
+
+    model, ctx, cfg = setup.model, setup.ctx, setup.arch
+    st = StepState(mode="train")
+    remat = cfg.plan.remat
+    aux = _make_aux(batch)
+    fam = model.family
+    has_aux = fam == "moe"
+    has_shared = fam == "hybrid"
+
+    def f_in(p_rest):
+        if "embeds" in batch:
+            return tf.sp_scatter_embeds(
+                batch["embeds"].astype(ctx.compute_dtype), ctx)
+        return tf.embed_tokens(p_rest, batch["tokens"], ctx, cfg)
+
+    if fam in ("dense", "vlm"):
+        fn = partial(tf.dense_block_apply, aux=aux, ctx=ctx, cfg=cfg, st=st)
+
+        def block(p_l, x):
+            y, _ = _remat(fn, remat)(p_l, x, cache=None)
+            return y
+    elif fam == "moe":
+        fn = partial(moe_mod.moe_block_apply, aux=aux, ctx=ctx, cfg=cfg,
+                     st=st)
+
+        def block(p_l, x):
+            y, _, al = _remat(fn, remat)(p_l, x, cache=None)
+            return y, al
+    elif fam == "hybrid":
+        def block(p_g, shared, x):
+            fn = partial(model._zamba_group_apply, shared=shared, aux=aux,
+                         ctx=ctx, st=st, remat=remat)
+            y, _ = _remat(fn, remat)(p_g, x, cache=None)
+            return y
+    elif fam == "ssm":
+        def block(p_g, x):
+            fn = partial(model._xlstm_group_apply, ctx=ctx, st=st,
+                         remat=remat)
+            y, _ = _remat(fn, remat)(p_g, x, cache=None)
+            return y
+    else:  # pragma: no cover — check_supported gates
+        raise ValueError(fam)
+
+    def f_out(p_rest, x):
+        loss_sum, n_tok = tf.lm_loss(p_rest, x, batch["labels"], ctx, cfg,
+                                     xent_chunk)
+        return loss_sum, n_tok
+
+    return f_in, block, f_out, has_aux, has_shared
+
+
+def _segmented_backward(setup, ov: OverlapLayout, params, batch,
+                        agg_states, schedule: str, xent_chunk: int):
+    """Forward (per-block vjp closures) + reverse-order backward with
+    per-bucket aggregation.  Returns (grads, new_agg_states, loss_sum,
+    ntok, moe_aux).  ``schedule="overlap"`` flushes each completed bucket
+    between backward stages, barrier-pinned; ``"serial"`` flushes all
+    buckets after the full backward.  Values are bit-identical.
+    ``schedule="raw"`` skips aggregation entirely and returns the local
+    unaggregated gradients (the unfused strawman's first dispatch)."""
+    from repro.train.train_step import MOE_AUX_COEF
+
+    f_in, block, f_out, has_aux, has_shared = _stage_fns(setup, batch,
+                                                         xent_chunk)
+    aggregator = agg_mod.GradAggregator(setup.agg_cfg)
+    layout = ov.layout
+    L = ov.n_stages
+    p_rest, stacked = _split_params(params, ov.stack_key)
+    dp = setup.dp_axes
+
+    do_agg = schedule != "raw" and \
+        bool(setup.agg_cfg.compress_axes or setup.agg_cfg.raw_axes)
+    squeezed = tuple(jax.tree.map(lambda x: x[0], st) for st in agg_states)
+
+    # ---- forward: one vjp closure per block stage --------------------
+    x, vjp_in = jax.vjp(f_in, p_rest)
+    block_vjps = []
+    aux_vals = []
+    for l in range(L):
+        p_l = jax.tree.map(lambda t, _l=l: t[_l], stacked)
+        if has_shared:
+            out, vjp_l = jax.vjp(block, p_l, p_rest["shared"], x)
+        else:
+            out, vjp_l = jax.vjp(block, p_l, x)
+        if has_aux:
+            x, al = out
+            aux_vals.append(al)
+        else:
+            x = out
+        block_vjps.append(vjp_l)
+    loss_sum, vjp_out, ntok = jax.vjp(f_out, p_rest, x, has_aux=True)
+
+    # ---- backward seeds ---------------------------------------------
+    n_glob = jax.lax.psum(ntok, dp) if dp else ntok
+    scale_axes = setup.p_dp // setup.p_fsdp
+    seed = (scale_axes / n_glob.astype(jnp.float32)).astype(loss_sum.dtype)
+    moe_aux = (sum(aux_vals) / L) if has_aux else jnp.float32(0.0)
+    aux_seed = jnp.asarray(MOE_AUX_COEF / (L * setup.p_fsdp),
+                           aux_vals[0].dtype) if has_aux else None
+
+    # ---- backward: reverse layer order, flushing ready buckets -------
+    n_leaves = len(layout.leaf_sizes)
+    leaf_vals: list = [None] * n_leaves
+    out_buckets: list = [None] * layout.n_buckets
+    new_states: list = list(squeezed) if squeezed else \
+        [() for _ in range(layout.n_buckets)]
+
+    def flush(b: int):
+        lo, hi = layout.bucket_leaves(b)
+        parts = [v.reshape(-1).astype(layout.dtype)
+                 for v in leaf_vals[lo:hi]]
+        bucket = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        st = squeezed[b] if squeezed else ()
+        out_buckets[b], new_states[b] = aggregator.aggregate_one(bucket, st)
+        return out_buckets[b]
+
+    d_rest_out, d_x = vjp_out(seed)
+    shared_acc = None
+    stage_param_grads: list = [None] * L
+    for s in range(L):
+        l = L - 1 - s
+        cot = (d_x, aux_seed) if has_aux else d_x
+        if has_shared:
+            d_pl, d_sh, d_x = block_vjps[l](cot)
+            shared_acc = d_sh if shared_acc is None else \
+                jax.tree.map(jnp.add, shared_acc, d_sh)
+        else:
+            d_pl, d_x = block_vjps[l](cot)
+        stage_param_grads[s] = d_pl
+        lo, hi = ov.stage_leaf_range(s)
+        leaf_vals[lo:hi] = jax.tree_util.tree_leaves(d_pl)
+        if do_agg and schedule == "overlap":
+            issued = [flush(b) for b in ov.buckets_ready_at(s)]
+            if issued:
+                # pin program order: the collectives are issued before the
+                # next block's backward; the latency-hiding scheduler then
+                # overlaps them with that compute.
+                d_x, *issued = jax.lax.optimization_barrier(
+                    (d_x, *issued))
+                for b, ob in zip(ov.buckets_ready_at(s), issued):
+                    out_buckets[b] = ob
+
+    d_rest_in, = vjp_in(d_x)
+    grads_rest = jax.tree.map(jnp.add, d_rest_out, d_rest_in)
+    if shared_acc is not None:
+        grads_rest = {**grads_rest,
+                      "shared": jax.tree.map(jnp.add, grads_rest["shared"],
+                                             shared_acc)}
+    lo, hi = ov.stage_leaf_range(L)
+    leaf_vals[lo:hi] = jax.tree_util.tree_leaves(grads_rest)
+
+    if do_agg:
+        if schedule == "overlap":
+            for b in ov.buckets_ready_at(L):
+                flush(b)
+        else:
+            for b in range(layout.n_buckets):
+                flush(b)
+        leaf_vals = bucketing.buckets_to_leaves(out_buckets, leaf_vals,
+                                                layout)
+
+    # ---- reassemble the gradient pytree ------------------------------
+    nb = ov.n_block_leaves
+    stage_leaf_lists = [leaf_vals[s * nb:(s + 1) * nb] for s in range(L)]
+    block_treedef = jax.tree_util.tree_structure(stage_param_grads[0])
+    layer_grads = [jax.tree_util.tree_unflatten(
+        block_treedef, stage_leaf_lists[L - 1 - l]) for l in range(L)]
+    g_stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *layer_grads)
+    rest_treedef = jax.tree_util.tree_structure(grads_rest)
+    g_rest = jax.tree_util.tree_unflatten(rest_treedef, leaf_vals[L * nb:])
+    grads = {**g_rest, ov.stack_key: g_stacked}
+
+    if squeezed:
+        new_agg = tuple(jax.tree.map(lambda x: x[None], ns)
+                        for ns in new_states)
+    else:
+        new_agg = agg_states
+    return grads, new_agg, loss_sum, ntok, moe_aux
+
+
+def make_step(setup, schedule: str = "overlap", xent_chunk: int = 1024):
+    """Segmented-backward step factory; same contract as
+    ``train_step.make_step`` (returns ``jitted(batch_example)``).
+
+    ``schedule="overlap"`` silently degrades to ``"serial"`` for
+    non-associative compressors (see :func:`effective_schedule`).
+    """
+    from repro.train import optimizer as opt_mod
+    from repro.train import train_step as ts
+
+    assert schedule in ("overlap", "serial"), schedule
+    check_supported(setup.arch, setup.arch.plan)
+    assert not setup.fsdp_axes and not setup.zero1
+    ov = build_layout(setup)
+    if schedule == "overlap":
+        schedule = effective_schedule(setup)
+    dp = setup.dp_axes
+
+    def step_fn(state, batch, lr):
+        params = state["params"]
+        grads, new_agg, loss_sum, ntok, aux = _segmented_backward(
+            setup, ov, params, batch, state["agg"], schedule, xent_chunk)
+        opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg,
+                           setup.param_specs)
+        new_params, new_opt, om = opt.update(grads, state["opt"], params,
+                                             lr)
+        loss_g = jax.lax.psum(loss_sum, dp) if dp else loss_sum
+        ntok_g = jax.lax.psum(ntok, dp) if dp else ntok
+        metrics = {"loss": loss_g / jnp.maximum(
+                       ntok_g.astype(jnp.float32), 1.0),
+                   "tokens": ntok_g,
+                   "grad_norm": om["grad_norm"],
+                   "moe_aux": aux}
+        new_state = {"step": state["step"] + 1, "params": new_params,
+                     "opt": new_opt, "agg": new_agg}
+        return new_state, metrics
+
+    batch_spec_fn = ts.make_batch_specs(setup)
+
+    def jitted(batch_example):
+        from repro.parallel.compat import shard_map
+        bspecs = batch_spec_fn(batch_example)
+        f = shard_map(step_fn, setup.mesh,
+                      in_specs=(setup.state_specs, bspecs, P()),
+                      out_specs=(setup.state_specs,
+                                 {"loss": P(), "tokens": P(),
+                                  "grad_norm": P(), "moe_aux": P()}))
+        return jax.jit(f, donate_argnums=(0,))
+
+    return jitted
+
+
+# --------------------------------------------------------------------------
+# the no-overlap strawman: backward and aggregation in separate dispatches
+# --------------------------------------------------------------------------
+def make_unfused_step(setup, xent_chunk: int = 1024):
+    """The paper-Fig-2 strawman, executable: dispatch 1 runs the backward
+    and materializes every device's raw gradients; dispatch 2 then issues
+    all bucket collectives and the update.  No overlap is *possible*
+    across the dispatch boundary — this is what "syncSGD without overlap"
+    costs, measured.  Returns ``build(batch_example) -> step`` like
+    :func:`make_step`."""
+    from repro.parallel.compat import shard_map
+    from repro.train import optimizer as opt_mod
+    from repro.train import train_step as ts
+
+    check_supported(setup.arch, setup.arch.plan)
+    ov = build_layout(setup)
+    dp = setup.dp_axes
+    all_ax = setup.all_axes
+    dev = lambda spec_leaf: P(all_ax)  # noqa: E731
+
+    def backward_fn(params, batch):
+        grads, _, loss_sum, ntok, aux = _segmented_backward(
+            setup, ov, params, batch, (), "raw", xent_chunk)
+        # leading device dim: raw grads differ per device pre-aggregation
+        return (jax.tree.map(lambda g: g[None], grads), loss_sum[None],
+                ntok[None], aux[None])
+
+    def agg_update_fn(state, grads_dev, loss_dev, ntok_dev, aux_dev, lr):
+        params = state["params"]
+        grads = jax.tree.map(lambda g: g[0], grads_dev)
+        loss_sum, ntok, aux = loss_dev[0], ntok_dev[0], aux_dev[0]
+        aggregator = agg_mod.GradAggregator(setup.agg_cfg)
+        if setup.agg_cfg.compress_axes or setup.agg_cfg.raw_axes:
+            squeezed = tuple(jax.tree.map(lambda x: x[0], st)
+                             for st in state["agg"])
+            ordered = _ordered_leaves(ov, grads)
+            buckets = bucketing.leaves_to_buckets(ordered, ov.layout)
+            outs, news = aggregator.aggregate_bucket_list(buckets, squeezed)
+            ordered = bucketing.buckets_to_leaves(outs, ordered, ov.layout)
+            grads = _unordered_tree(ov, ordered, grads)
+            new_agg = tuple(jax.tree.map(lambda x: x[None], ns)
+                            for ns in news) if squeezed else state["agg"]
+        else:
+            new_agg = state["agg"]
+        opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg,
+                           setup.param_specs)
+        new_params, new_opt, om = opt.update(grads, state["opt"], params,
+                                             lr)
+        loss_g = jax.lax.psum(loss_sum, dp) if dp else loss_sum
+        ntok_g = jax.lax.psum(ntok, dp) if dp else ntok
+        metrics = {"loss": loss_g / jnp.maximum(
+                       ntok_g.astype(jnp.float32), 1.0),
+                   "tokens": ntok_g,
+                   "grad_norm": om["grad_norm"],
+                   "moe_aux": aux}
+        return {"step": state["step"] + 1, "params": new_params,
+                "opt": new_opt, "agg": new_agg}, metrics
+
+    batch_spec_fn = ts.make_batch_specs(setup)
+
+    def build(batch_example):
+        bspecs = batch_spec_fn(batch_example)
+        gspecs = jax.tree.map(dev, setup.param_specs,
+                              is_leaf=lambda s: isinstance(s, P))
+        f1 = jax.jit(shard_map(
+            backward_fn, setup.mesh,
+            in_specs=(setup.state_specs["params"], bspecs),
+            out_specs=(gspecs, P(all_ax), P(all_ax), P(all_ax))))
+        f2 = jax.jit(shard_map(
+            agg_update_fn, setup.mesh,
+            in_specs=(setup.state_specs, gspecs, P(all_ax), P(all_ax),
+                      P(all_ax), P()),
+            out_specs=(setup.state_specs,
+                       {"loss": P(), "tokens": P(),
+                        "grad_norm": P(), "moe_aux": P()})),
+            donate_argnums=(0, 1))
+
+        def step(state, batch, lr):
+            grads_dev, loss_dev, ntok_dev, aux_dev = f1(state["params"],
+                                                        batch)
+            return f2(state, grads_dev, loss_dev, ntok_dev, aux_dev, lr)
+
+        return step
+
+    return build
+
+
+def _ordered_leaves(ov: OverlapLayout, grads) -> list:
+    """Gradient pytree -> backward-completion-ordered leaf list (the leaf
+    order :func:`build_layout` built the bucket layout over)."""
+    rest, stacked = _split_params(grads, ov.stack_key)
+    stacked_leaves = jax.tree_util.tree_leaves(stacked)
+    out = []
+    for s in range(ov.n_stages):
+        l = ov.n_stages - 1 - s
+        out.extend(t[l] for t in stacked_leaves)
+    out.extend(jax.tree_util.tree_leaves(rest))
+    return out
+
+
+def _unordered_tree(ov: OverlapLayout, ordered: list, grads_like):
+    """Inverse of :func:`_ordered_leaves` (structure from ``grads_like``)."""
+    rest, stacked = _split_params(grads_like, ov.stack_key)
+    nb = ov.n_block_leaves
+    L = ov.n_stages
+    stacked_leaves = jax.tree_util.tree_leaves(stacked)
+    new_stacked_leaves = []
+    for i in range(nb):
+        per_layer = [ordered[(L - 1 - l) * nb + i] for l in range(L)]
+        new_stacked_leaves.append(jnp.stack(per_layer))
+    new_stacked = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(stacked), new_stacked_leaves)
+    new_rest = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(rest), ordered[L * nb:])
+    return {**new_rest, ov.stack_key: new_stacked}

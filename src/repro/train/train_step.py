@@ -72,6 +72,10 @@ class TrainSetup:
     param_specs: Any = None
     state_specs: Any = None          # full TrainState spec tree
     zero1: bool = False
+    # segmented backward + reverse-order bucketed aggregation fused into
+    # the backward pass (repro.train.overlap) — the paper's optimized
+    # baseline, executable.  Implies the leaf-aligned bucket layout.
+    overlap: bool = False
 
     # ------------------------------------------------------------------
     @property
@@ -112,6 +116,9 @@ def build(arch: ArchConfig, mesh: Mesh,
     else:
         fsdp_axes = ()
     zero1 = plan.dp_mode == "ddp" and plan.zero1
+    if plan.overlap:
+        from repro.train import overlap as overlap_mod
+        overlap_mod.check_supported(arch, plan)
     ctx = ShardCtx(
         tp=tp,
         dp_axes=dp_axes,
@@ -145,7 +152,7 @@ def build(arch: ArchConfig, mesh: Mesh,
     setup = TrainSetup(arch=arch, mesh=mesh, model=Model(arch), ctx=ctx,
                        dp_axes=dp_axes, fsdp_axes=fsdp_axes,
                        agg_cfg=agg_cfg, opt_cfg=ocfg,
-                       zero1=zero1)
+                       zero1=zero1, overlap=plan.overlap)
     _, specs = setup.model.abstract_init(ctx)
     setup.param_specs = specs
     setup.state_specs = _state_specs(setup)
@@ -184,6 +191,13 @@ def _grads_like_local(setup: TrainSetup):
 
 
 def _bucket_layout(setup: TrainSetup):
+    """The bucket layout the compressor state / ZeRO-1 shards key off.
+    Overlap mode uses the leaf-aligned layout over backward-completion-
+    ordered leaves (repro.train.overlap); classic mode keeps the
+    byte-based flat split."""
+    if setup.overlap:
+        from repro.train import overlap as overlap_mod
+        return overlap_mod.build_layout(setup).layout
     return bucketing.layout_for(_grads_like_local(setup),
                                 setup.agg_cfg.bucket_mb)
 
@@ -291,7 +305,8 @@ def fresh_agg_state(setup: TrainSetup, key):
     layout = _bucket_layout(setup)
     comp = setup.agg_cfg.build()
     n_dev = _n_devices(setup)
-    if setup.agg_cfg.compressor == "none" or             not setup.agg_cfg.compress_axes:
+    if setup.agg_cfg.compressor == "none" or \
+            not setup.agg_cfg.compress_axes:
         return ()
 
     def init_fn(k):
@@ -343,6 +358,11 @@ def _fill_zero1_master(setup: TrainSetup, state, layout):
 # --------------------------------------------------------------------------
 def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
     """Returns a jitted ``step(state, batch, lr) -> (state, metrics)``."""
+    if setup.overlap:
+        assert accum == 1, "overlap + gradient accumulation unsupported"
+        from repro.train import overlap as overlap_mod
+        return overlap_mod.make_step(setup, schedule="overlap",
+                                     xent_chunk=xent_chunk)
     model = setup.model
     ctx = setup.ctx
     arch = setup.arch
@@ -379,22 +399,17 @@ def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
                             is_leaf=lambda s: isinstance(s, P))
 
     def aggregate(grads, agg_states):
-        """Returns aggregated grads + new compressor states.  Each bucket
-        runs the encode -> reduce -> decode pipeline; the aggregator picks
-        the collective from the payload's associativity."""
+        """Returns aggregated grads + new compressor states.  The bucket
+        loop itself lives in ``GradAggregator.aggregate_bucketed`` (one
+        code path with the aggregator); this wrapper only strips/restores
+        the leading device dim the TrainState carries on per-device
+        compressor state."""
         if setup.agg_cfg.compressor == "none" or \
                 not (setup.agg_cfg.compress_axes or setup.agg_cfg.raw_axes):
             return grads, agg_states
         squeezed = tuple(jax.tree.map(lambda x: x[0], st)
                          for st in agg_states)
-        buckets = bucketing.to_buckets(grads, layout)
-        outs, news = [], []
-        for i, b in enumerate(buckets):
-            st = squeezed[i] if squeezed else ()
-            ob, ns = aggregator.aggregate_one(b, st)
-            outs.append(ob)
-            news.append(ns)
-        out = bucketing.from_buckets(outs, grads, layout)
+        out, news = aggregator.aggregate_bucketed(grads, squeezed, layout)
         if squeezed:
             news = tuple(jax.tree.map(lambda x: x[None], ns) for ns in news)
             return out, news

@@ -44,3 +44,27 @@ def test_last_bucket_short():
     layout = bucketing.layout_for(tree, 0.001)  # 262 elems/bucket
     assert layout.sizes[-1] <= layout.bucket_elems
     assert sum(layout.sizes) == 1000
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=shapes_strategy,
+       bucket_kb=st.floats(min_value=0.001, max_value=0.05))
+def test_leaf_aligned_roundtrip(shapes, bucket_kb):
+    """Leaf-aligned layouts: boundaries snap to leaf edges (no leaf
+    straddles a bucket), the leaf->bucket map is monotone, and
+    to_buckets/from_buckets round-trip exactly."""
+    tree = {f"w{i}": jnp.arange(np.prod(s), dtype=jnp.float32).reshape(s)
+            + 100 * i for i, s in enumerate(shapes)}
+    layout = bucketing.layout_for(tree, bucket_kb / 1024, leaf_aligned=True)
+    assert layout.leaf_aligned
+    assert sum(layout.sizes) == layout.n_elements
+    assert list(layout.leaf_bucket) == sorted(layout.leaf_bucket)
+    # bucket b's size == the sum of exactly its leaves' sizes
+    for b in range(layout.n_buckets):
+        lo, hi = layout.bucket_leaves(b)
+        assert sum(layout.leaf_sizes[lo:hi]) == layout.sizes[b]
+    buckets = bucketing.to_buckets(tree, layout)
+    assert [b.shape[0] for b in buckets] == list(layout.sizes)
+    back = bucketing.from_buckets(buckets, tree, layout)
+    for k in tree:
+        np.testing.assert_array_equal(back[k], tree[k])

@@ -17,6 +17,7 @@ SCRIPTS = [
     "dist_aggregate_oracle.py",
     "dist_equivalence.py",
     "dist_fault_tolerance.py",
+    "dist_overlap_equivalence.py",
 ]
 
 

@@ -65,7 +65,10 @@ def test_spec_hash_stability():
     b = ExperimentSpec(workload="resnet50", method="signsgd", workers=8)
     assert a.spec_hash() == b.spec_hash()
     assert a.spec_hash() != dataclasses.replace(a, workers=16).spec_hash()
-    assert a.spec_hash() == "7f293d96c3090472", a.spec_hash()
+    # wire-format rev 2: the ``overlap`` baseline knob joined the spec
+    # (PR 3); old stored rows still load via from_json defaults, but
+    # hashes intentionally moved.
+    assert a.spec_hash() == "61be30756824ba9b", a.spec_hash()
 
 
 def test_paper_matrix_size_and_uniqueness():

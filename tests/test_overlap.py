@@ -1,0 +1,155 @@
+"""The overlap subsystem's tier-1 contract (single device; the 4-device
+bit-exactness oracle is tests/dist/dist_overlap_equivalence.py):
+
+  * leaf-aligned layouts snap boundaries to leaf edges and round-trip
+    ``to_buckets``/``from_buckets`` exactly;
+  * ``build_layout`` orders buckets by backward completion (reverse layer
+    order, tail last) and the readiness map is monotone;
+  * ``check_supported`` rejects plans the segmented step cannot honor;
+  * non-associative compressors degrade ``schedule="overlap"`` to serial
+    (``effective_schedule`` — paper Table 3 made executable);
+  * the segmented step trains (loss trajectory agrees with the classic
+    scan-based step to fp tolerance — different XLA programs).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core import bucketing
+from repro.core.aggregator import AggregatorConfig
+from repro.data.pipeline import Pipeline
+from repro.data.synthetic import DataConfig
+from repro.launch.mesh import make_local_mesh
+from repro.train import overlap
+from repro.train import train_step as ts
+
+
+def _overlap_cfg(**plan_overrides):
+    cfg = base.reduced(base.get("tinyllama-1.1b"))
+    plan = dataclasses.replace(cfg.plan, bucket_mb=1, zero1=False,
+                               overlap=True, **plan_overrides)
+    return dataclasses.replace(cfg, vocab=64, plan=plan)
+
+
+# ------------------------------------------------------- leaf alignment
+def test_leaf_aligned_roundtrip_exact():
+    tree = {"a": jnp.arange(300, dtype=jnp.float32).reshape(10, 30),
+            "b": jnp.arange(7, dtype=jnp.float32) + 1000.0,
+            "c": jnp.arange(4096, dtype=jnp.float32).reshape(64, 64),
+            "d": jnp.float32(3.0)}
+    layout = bucketing.layout_for(tree, 0.001, leaf_aligned=True)
+    assert layout.leaf_aligned and layout.n_buckets > 1
+    # no leaf straddles a boundary: every bucket is whole leaves
+    for b in range(layout.n_buckets):
+        lo, hi = layout.bucket_leaves(b)
+        assert sum(layout.leaf_sizes[lo:hi]) == layout.sizes[b]
+    buckets = bucketing.to_buckets(tree, layout)
+    back = bucketing.from_buckets(buckets, tree, layout)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_leaf_aligned_zero_size_trailing_leaf():
+    """A zero-size trailing leaf still lands in a bucket that exists."""
+    sizes, leaf_bucket = bucketing.leaf_aligned_sizes([5, 0], 5)
+    assert max(leaf_bucket) < len(sizes)
+    assert sum(sizes) == 5
+    layout = bucketing.layout_from_leaf_sizes([5, 0], jnp.float32, 5 / 2**20)
+    tree = {"a": jnp.arange(5.0), "b": jnp.zeros((0,))}
+    back = bucketing.from_buckets(bucketing.to_buckets(tree, layout),
+                                  tree, layout)
+    np.testing.assert_array_equal(np.asarray(back["a"]),
+                                  np.asarray(tree["a"]))
+    assert back["b"].shape == (0,)
+
+
+def test_leaf_aligned_big_leaf_gets_own_run():
+    """A leaf larger than the byte target still lands in exactly one
+    bucket (snapped, never split)."""
+    sizes, leaf_bucket = bucketing.leaf_aligned_sizes([10, 5000, 10], 256)
+    assert len(set(leaf_bucket)) == len(sizes)
+    big_bucket = leaf_bucket[1]
+    lo = leaf_bucket.index(big_bucket)
+    assert sizes[big_bucket] >= 5000
+    assert sum(sizes) == 5020
+
+
+# ------------------------------------------------------- layout / gating
+def test_build_layout_reverse_completion_order():
+    setup = ts.build(_overlap_cfg(), make_local_mesh())
+    assert setup.overlap
+    ov = overlap.build_layout(setup)
+    # readiness is monotone in bucket index: earlier buckets complete at
+    # earlier (deeper-layer) backward stages
+    assert list(ov.bucket_ready) == sorted(ov.bucket_ready)
+    assert ov.bucket_ready[-1] == ov.n_stages          # tail flushes last
+    # every ordered leaf is covered exactly once by the stage ranges
+    covered = []
+    for s in range(ov.n_stages + 1):
+        lo, hi = ov.stage_leaf_range(s)
+        covered.extend(range(lo, hi))
+    assert covered == list(range(len(ov.layout.leaf_sizes)))
+    # the TrainState's bucket layout IS the overlap layout
+    assert ts._bucket_layout(setup).sizes == ov.layout.sizes
+    assert ts._bucket_layout(setup).leaf_aligned
+
+
+def test_check_supported_gates():
+    cfg = base.reduced(base.get("tinyllama-1.1b"))
+    with pytest.raises(ValueError, match="FSDP"):
+        overlap.check_supported(cfg, dataclasses.replace(
+            cfg.plan, dp_mode="fsdp"))
+    with pytest.raises(ValueError, match="zero1"):
+        overlap.check_supported(cfg, dataclasses.replace(
+            cfg.plan, dp_mode="ddp", zero1=True))
+    audio = base.reduced(base.get("seamless-m4t-medium"))
+    with pytest.raises(ValueError, match="family"):
+        overlap.check_supported(audio, dataclasses.replace(
+            audio.plan, dp_mode="ddp", zero1=False))
+    # build() enforces the gate when the plan asks for overlap
+    with pytest.raises(ValueError, match="overlap unsupported"):
+        ts.build(cfg, make_local_mesh(), dp_mode="ddp", zero1=True,
+                 overlap=True)
+
+
+def test_effective_schedule_nonassociative_falls_back():
+    setup = ts.build(_overlap_cfg(), make_local_mesh())
+    base_cfg = AggregatorConfig(compressor="signsgd",
+                                compress_axes=("data",), raw_axes=())
+    setup.agg_cfg = base_cfg
+    assert overlap.effective_schedule(setup) == "serial"
+    setup.agg_cfg = dataclasses.replace(base_cfg, compressor="randomk")
+    assert overlap.effective_schedule(setup) == "overlap"
+    setup.agg_cfg = dataclasses.replace(base_cfg, compressor="none")
+    assert overlap.effective_schedule(setup) == "overlap"
+
+
+# ------------------------------------------------------- the step itself
+def test_segmented_step_matches_classic_scan_step():
+    mesh = make_local_mesh()
+    data = Pipeline(DataConfig(vocab=64, seq_len=32, global_batch=4),
+                    prefetch=0)
+    it = iter(data)
+    batches = [next(it) for _ in range(3)]
+
+    def run(cfg):
+        setup = ts.build(cfg, mesh)
+        state = ts.init_state(setup, jax.random.key(0))
+        step = ts.make_step(setup)(batches[0])
+        losses = []
+        for b in batches:
+            state, m = step(state, b, jnp.float32(1e-3))
+            losses.append(float(m["loss"]))
+        return losses
+
+    seg = run(_overlap_cfg())
+    classic = run(dataclasses.replace(
+        _overlap_cfg(), plan=dataclasses.replace(_overlap_cfg().plan,
+                                                 overlap=False)))
+    np.testing.assert_allclose(seg, classic, rtol=5e-4)
+    assert seg[-1] < seg[0]        # it trains
