@@ -91,15 +91,11 @@ def abstract_state(setup):
     params, _ = setup.model.abstract_init(setup.ctx)
     state = {"step": jax.ShapeDtypeStruct((), jnp.int32), "params": params}
     if setup.zero1:
-        shard_lens = [ts._zero1_shard_len(setup, s) for s in layout.sizes]
+        cap = ts._zero1_plan(setup).cap
         state["opt"] = {
             "t": jax.ShapeDtypeStruct((), jnp.int32),
-            "buckets": tuple(
-                {"master": jax.ShapeDtypeStruct((sl * n_dev,),
-                                                jnp.float32),
-                 "m": jax.ShapeDtypeStruct((sl * n_dev,), jnp.float32),
-                 "v": jax.ShapeDtypeStruct((sl * n_dev,), jnp.float32)}
-                for sl in shard_lens)}
+            "shard": {k: jax.ShapeDtypeStruct((n_dev, cap), jnp.float32)
+                      for k in ("master", "m", "v")}}
     else:
         from repro.train import optimizer as opt_mod
         opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg,

@@ -66,7 +66,10 @@ class ParallelPlan:
     topk_frac: float = 0.01
     qsgd_bits: int = 8
     error_feedback: bool = True
-    bucket_mb: int = 25           # DDP bucket size (paper: PyTorch default 25MB)
+    # DDP bucket byte target (paper: PyTorch default 25MB).  Fractional
+    # values are for smoke scale (ZeRO-1 owner sharding needs
+    # n_buckets >= p_dp to be non-degenerate).
+    bucket_mb: float = 25
     # DDP only: fuse reverse-order bucketed aggregation into the backward
     # pass (leaf-aligned buckets + segmented per-block vjp; the paper's
     # optimized-syncSGD baseline, §2.2).  repro.train.overlap; degrades to

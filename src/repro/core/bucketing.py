@@ -5,7 +5,7 @@ Two layout families share one :class:`BucketLayout` type:
 ``layout_for(tree, bucket_mb)``
     Byte-based boundaries (layer-agnostic): the gradient pytree is raveled
     into one flat vector and split into fixed-byte buckets.  This is the
-    historical executable path and what the ZeRO-1 flat optimizer shards.
+    historical executable path (the classic non-overlapped step).
 
 ``layout_for(tree, bucket_mb, leaf_aligned=True)``
     PyTorch-DDP-style *leaf-aligned* boundaries: buckets are greedy runs of
@@ -19,6 +19,12 @@ Two layout families share one :class:`BucketLayout` type:
 
 Aggregation (raw all-reduce or a compressor) runs per bucket either way;
 the result is unraveled back to the original pytree.
+
+ZeRO-1 shards the optimizer state ALONG bucket boundaries:
+``owner_plan(layout, n_ranks)`` assigns each bucket one owner rank in
+contiguous balanced runs (``OwnerPlan``), so a rank's shard is a single
+static-length slice of the flat bucket space — the SPMD-friendly form
+``train_step.zero1_apply`` slices, updates, and all-gathers.
 """
 from __future__ import annotations
 
@@ -76,8 +82,10 @@ def leaf_aligned_sizes(leaf_sizes: Sequence[int], bucket_elems: int
                        ) -> tuple[tuple[int, ...], tuple[int, ...]]:
     """Greedy leaf -> bucket assignment: walk leaves in order, close the
     current bucket once it holds >= ``bucket_elems`` elements.  Every
-    bucket owns at least one whole leaf (a leaf bigger than the target
-    gets its own bucket); no leaf straddles a boundary.
+    bucket owns at least one whole leaf and no leaf straddles a boundary
+    — so a leaf bigger than the target joins the currently-open bucket
+    whole (the bucket then closes oversized: up to target-1 preceding
+    elements plus the big leaf, not "its own bucket").
 
     Returns (per-bucket element counts, leaf index -> bucket index).
     """
@@ -198,3 +206,89 @@ def map_buckets(fn: Callable, tree, layout: BucketLayout):
     buckets = to_buckets(tree, layout)
     buckets = [fn(i, b) for i, b in enumerate(buckets)]
     return from_buckets(buckets, tree, layout)
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 owner sharding: shard boundaries ARE bucket boundaries
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class OwnerPlan:
+    """Bucket-granular ZeRO-1 sharding over the DP ranks.
+
+    Each bucket is owned by exactly ONE rank; a rank's optimizer shard is
+    the concatenation of its owned buckets.  Ownership runs are contiguous
+    in bucket order (rank r owns buckets ``[first_r, last_r]``), so a
+    rank's shard is one contiguous slice ``[starts[r], starts[r] +
+    lengths[r])`` of the flat bucket-concat space — sliceable with a
+    static length (``cap``) from a rank-indexed start, which is what makes
+    the update SPMD-friendly (no per-rank program differences).
+    """
+    n_ranks: int
+    owners: tuple[int, ...]           # bucket index -> owner rank
+    starts: tuple[int, ...]           # rank -> flat start offset
+    lengths: tuple[int, ...]          # rank -> owned element count
+    bucket_offsets: tuple[int, ...]   # bucket -> flat start offset
+
+    @property
+    def cap(self) -> int:
+        """Padded per-rank shard length (the SPMD state size)."""
+        return max(self.lengths) if self.lengths else 0
+
+    def param_offset(self, b: int) -> int:
+        """Offset of bucket ``b`` inside the (p, cap) gathered-shard
+        space: ``owner_row * cap + position within the owner's shard``."""
+        r = self.owners[b]
+        return r * self.cap + self.bucket_offsets[b] - self.starts[r]
+
+
+def assign_owner_ranks(sizes: Sequence[int], n_ranks: int
+                       ) -> tuple[int, ...]:
+    """Contiguous balanced bucket -> owner-rank assignment: walk buckets
+    in order, close the current rank's run once it holds >= total/n_ranks
+    elements.  Every bucket has exactly one owner; owners are
+    non-decreasing (contiguous runs); trailing ranks may own nothing when
+    there are fewer buckets than ranks."""
+    total = sum(int(s) for s in sizes)
+    target = -(-total // max(1, n_ranks))
+    owners: list[int] = []
+    rank, acc = 0, 0
+    for s in sizes:
+        if acc >= target and rank + 1 < n_ranks:
+            rank += 1
+            acc = 0
+        owners.append(rank)
+        acc += int(s)
+    return tuple(owners)
+
+
+def owner_plan(layout: BucketLayout, n_ranks: int) -> OwnerPlan:
+    """The ZeRO-1 sharding plan for a bucket layout (any layout family:
+    byte-based or leaf-aligned — ownership is per bucket either way).
+
+    Sharding is bucket-granular, so it degenerates when there are fewer
+    buckets than ranks: ``cap`` stops shrinking with p (in the limit of
+    one bucket every rank carries full-model fp32 state and the param
+    gather moves p× the useful bytes).  That configuration is still
+    *correct* (the bit-identity oracles run it), but it is not ZeRO —
+    warn so a production launch picks a smaller ``bucket_mb`` instead."""
+    if layout.n_buckets < n_ranks:
+        import warnings
+        warnings.warn(
+            f"ZeRO-1 owner sharding is degenerate: {layout.n_buckets} "
+            f"bucket(s) over {n_ranks} DP ranks — shard boundaries are "
+            f"bucket boundaries, so trailing ranks own nothing and "
+            f"per-rank state stops shrinking with p.  Lower bucket_mb "
+            f"until n_buckets >= p_dp.", stacklevel=2)
+    owners = assign_owner_ranks(layout.sizes, n_ranks)
+    bucket_offsets, off = [], 0
+    for s in layout.sizes:
+        bucket_offsets.append(off)
+        off += int(s)
+    starts, lengths = [], []
+    for r in range(n_ranks):
+        owned = [b for b in range(layout.n_buckets) if owners[b] == r]
+        starts.append(bucket_offsets[owned[0]] if owned
+                      else (starts[-1] + lengths[-1] if starts else 0))
+        lengths.append(sum(int(layout.sizes[b]) for b in owned))
+    return OwnerPlan(n_ranks, owners, tuple(starts), tuple(lengths),
+                     tuple(bucket_offsets))

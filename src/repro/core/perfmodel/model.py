@@ -112,6 +112,29 @@ def compressed_time(w: Workload, p: int, hw: Hardware,
     return w.t_comp + spec.t_encode_decode + comm
 
 
+def zero1_gather_time(w: Workload, p: int, hw: Hardware,
+                      param_bytes_frac: float = 0.5) -> float:
+    """The comm ZeRO-1 adds on top of any gradient-exchange scheme: after
+    the sharded update, each rank all-gathers its owned parameter shard
+    (~model/p elements, working-dtype — bf16 working params at half the
+    fp32 gradient bytes by default).  Mirrors
+    ``train_step.zero1_apply``'s Payload gather; applies equally to the
+    syncSGD baseline and to every compression leg, so it shifts absolute
+    times, not just the baseline."""
+    if p <= 1:
+        return 0.0
+    return costs.all_gather(w.model_bytes * param_bytes_frac / p, p,
+                            hw.net_bw, hw.alpha)
+
+
+def accum_scaled(w: Workload, accum: int) -> Workload:
+    """Gradient accumulation multiplies the per-step compute leg while the
+    per-step comm stays one sync — the amortization that shrinks
+    compression's addressable gap (Zhang et al.; Han et al.)."""
+    return w if accum <= 1 else dataclasses.replace(
+        w, t_comp=w.t_comp * accum, t_fwd=w.t_fwd * accum)
+
+
 def linear_scaling_time(w: Workload) -> float:
     """Ideal weak-scaling iteration time (= single-device backward)."""
     return w.t_comp

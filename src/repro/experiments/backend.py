@@ -41,7 +41,7 @@ class Result:
     ``ResultStore`` row)."""
     spec: ExperimentSpec
     backend: str
-    status: str = "ok"                 # "ok" | "error" | "missing"
+    status: str = "ok"          # "ok" | "error" | "missing" | "skipped"
     metrics: dict = dataclasses.field(default_factory=dict)
     error: str = ""
 
@@ -149,11 +149,15 @@ class AnalyticBackend:
     def run(self, spec: ExperimentSpec) -> Result:
         from repro.core.perfmodel import model as pm
         try:
-            w = self._workload(spec)
+            w = pm.accum_scaled(self._workload(spec), spec.accum)
             hw = self._hardware(spec)
             p = spec.workers
-            t_overlapped = pm.sync_sgd_time(w, p, hw)
-            t_serial = pm.sync_sgd_serial_time(w, p, hw)
+            # ZeRO-1's post-update param gather lands on EVERY leg
+            # (baseline and compressed alike — the update is sharded no
+            # matter how the gradients arrived).
+            t_z1 = pm.zero1_gather_time(w, p, hw) if spec.zero1 else 0.0
+            t_overlapped = pm.sync_sgd_time(w, p, hw) + t_z1
+            t_serial = pm.sync_sgd_serial_time(w, p, hw) + t_z1
             # the overlap knob picks the baseline the cell competes
             # against: None/True = the paper's optimized overlapped
             # syncSGD (historic behaviour), False = the Fig-2 serial
@@ -166,9 +170,11 @@ class AnalyticBackend:
                      overlap_saving=1.0 - t_overlapped / t_serial,
                      gap_s=t_sync - pm.linear_scaling_time(w),
                      required_ratio=pm.required_compression(w, p, hw))
+            if spec.zero1:
+                m["t_zero1_gather_s"] = t_z1
             if not spec.is_baseline:
                 cspec = self._compression(spec, w, hw)
-                t = pm.compressed_time(w, p, hw, cspec)
+                t = pm.compressed_time(w, p, hw, cspec) + t_z1
                 m.update(
                     t_method_s=t,
                     speedup=t_sync / t,
@@ -292,6 +298,15 @@ class MeasuredBackend:
                 plan_args += ["--plan", f"{field_of[k]}={v}"]
         if method in ("syncsgd",):
             method = "none"
+        if spec.zero1:
+            plan_args += ["--zero1"]
+        if spec.accum > 1:
+            plan_args += ["--accum", str(spec.accum)]
+        for k, v in spec.overrides:
+            # free-form ParallelPlan overrides, same as dryrun cells
+            # (e.g. bucket_mb=0.25 so a smoke-scale zero1 cell still has
+            # n_buckets >= p_dp — non-degenerate owner sharding)
+            plan_args += ["--plan", f"{k}={v}"]
         cmd = [sys.executable, "-m", "repro.train.overlap_bench",
                "--arch", spec.workload, "--devices",
                str(spec.workers or 4), "--method", method,
@@ -369,7 +384,12 @@ class MeasuredBackend:
                                      or not self.compile_missing):
             with open(path) as f:
                 rec = json.load(f)
-        elif self.compile_missing:
+            if rec.get("status") == "error" and self.compile_missing:
+                # artifact reuse covers ok/skipped cells only — a cell
+                # that failed (possibly transiently: compile OOM, …) is
+                # retried rather than replaying its stale error forever
+                rec = None
+        if rec is None and self.compile_missing:
             from repro.launch import dryrun
             rec = dryrun.run_cell(
                 spec.workload, spec.shape, spec.mesh,
@@ -378,6 +398,11 @@ class MeasuredBackend:
         if rec is None:
             return Result(spec, self.name, status="missing",
                           error=f"no dry-run artifact at {path}")
+        if rec.get("status") == "skipped":
+            # not-applicable (arch × shape) cells are first-class sweep
+            # outcomes, not errors — the dryrun CLI's Grid run counts them
+            return Result(spec, self.name, status="skipped",
+                          error=rec.get("reason", ""))
         if rec.get("status") != "ok":
             return Result(spec, self.name, status="error",
                           error=rec.get("error", rec.get("reason", "?")))

@@ -69,6 +69,14 @@ class ExperimentSpec:
                     (historic behaviour); ``False`` = the serial
                     no-overlap strawman (analytic: Fig-2 serial time;
                     train: reported either way).
+      ``zero1``     shard optimizer state owner-rank-per-bucket over DP
+                    (analytic: adds the post-update parameter all-gather
+                    to every leg; train: runs the measured schedules
+                    under ``plan.zero1=True``).  Wire-format rev 3.
+      ``accum``     gradient-accumulation microbatches per step (analytic:
+                    multiplies the compute leg, amortizing the unchanged
+                    per-step comm; train: per-microbatch segmented
+                    backward with flush-on-final-microbatch).  Rev 3.
 
     Inline overrides (None/0 = resolve from the calibration registry):
       workload: ``model_bytes``, ``t_comp_s``;
@@ -89,6 +97,8 @@ class ExperimentSpec:
     compress_axes: str = "pod"
     kind: str = "analytic"
     overlap: Optional[bool] = None
+    zero1: bool = False
+    accum: int = 1
     # -- inline workload parameters (0.0 = resolve by name) --
     model_bytes: float = 0.0
     t_comp_s: float = 0.0

@@ -14,6 +14,12 @@ For each cell this:
   5. parses the compiled HLO (trip-count-aware) into the three roofline
      terms and writes artifacts/dryrun/<cell>.json.
 
+The CLI sweep is a ``Grid`` of ``ExperimentSpec(kind="dryrun")`` cells run
+through the shared experiments ``Runner`` + ``MeasuredBackend``
+(docs/experiments_api.md) — the same declarative form
+``benchmarks/perf_iterations.py`` uses; ``--resume`` reuses existing
+artifacts via the backend instead of recompiling.
+
 Usage:
   python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k \
       --mesh single
@@ -90,6 +96,8 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):       # jax<0.5 returns [dict]
+        cost = cost[0] if cost else {}
     state_bytes = _state_bytes_per_device(arch, shape, mesh)
     if verbose:
         print(f"--- {arch_name} × {shape_name} × {mesh_kind} ---")
@@ -249,6 +257,19 @@ def _write(rec: dict, out_dir: str):
         json.dump(rec, f, indent=1)
 
 
+def grid(archs, shapes, meshes):
+    """The dry-run matrix as a ``Grid`` of ``kind="dryrun"`` specs — the
+    same declarative form ``benchmarks/perf_iterations.py`` uses, so the
+    CLI sweep rides the shared Runner instead of a bespoke loop."""
+    from repro.experiments import ExperimentSpec, Grid
+    base = ExperimentSpec(workload=archs[0], kind="dryrun", method="plan",
+                          shape=shapes[0], mesh=meshes[0])
+    mesh_vals = [dict(mesh=m, workers=512 if m == "multi" else 256)
+                 for m in meshes]
+    return Grid.over(base, workload=list(archs), shape=list(shapes),
+                     mesh=mesh_vals)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -265,21 +286,22 @@ def main(argv=None):
     shapes = list(shp.SHAPES) if (args.all or not args.shape) \
         else [args.shape]
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
-    results = []
-    for a in archs:
-        for s in shapes:
-            for m in meshes:
-                cell = _cell_name(a, s, m)
-                path = os.path.join(args.out, cell + ".json")
-                if args.resume and os.path.exists(path):
-                    rec = json.load(open(path))
-                    if rec.get("status") in ("ok", "skipped"):
-                        results.append(rec)
-                        continue
-                results.append(run_cell(a, s, m, args.out))
-    ok = sum(r["status"] == "ok" for r in results)
-    skip = sum(r["status"] == "skipped" for r in results)
-    err = sum(r["status"] == "error" for r in results)
+
+    from repro.experiments import MeasuredBackend, Runner
+    backend = MeasuredBackend(art_dir=args.out, compile_missing=True,
+                              reuse_artifacts=args.resume)
+
+    def progress(i, n, r):
+        s = r.spec
+        msg = r.status if r.ok else f"{r.status}: {r.error}"
+        print(f"[{i}/{n}] {s.workload} × {s.shape} × {s.mesh}: {msg}",
+              flush=True)
+
+    results = Runner(backend, progress=progress).run(
+        grid(archs, shapes, meshes))
+    ok = sum(r.status == "ok" for r in results)
+    skip = sum(r.status == "skipped" for r in results)
+    err = len(results) - ok - skip
     print(f"\n=== dry-run: {ok} ok / {skip} skipped / {err} errors "
           f"of {len(results)} cells ===")
     return 1 if err else 0

@@ -76,24 +76,22 @@ def main(argv=None):
     if args.compress_axes:
         overrides["compress_axes"] = args.compress_axes
     if args.overlap:
-        # overlap is DDP-only without ZeRO-1; say so when we flip the
-        # arch's own plan instead of silently benchmarking a different
-        # configuration than the arch name suggests
-        forced = {k: v for k, v in
-                  dict(dp_mode="ddp", zero1=False).items()
-                  if getattr(arch.plan, k) != v}
-        if forced:
-            print(f"[train] --overlap forces {forced} "
-                  f"(arch plan had dp_mode={arch.plan.dp_mode!r}, "
-                  f"zero1={arch.plan.zero1})")
-        overrides.update(overlap=True, **dict(dp_mode="ddp", zero1=False))
+        # overlap is DDP-only (ZeRO-1 and accum>1 compose with it); say so
+        # when we flip the arch's own plan instead of silently
+        # benchmarking a different configuration than the arch name
+        # suggests
+        if arch.plan.dp_mode != "ddp":
+            print(f"[train] --overlap forces dp_mode='ddp' "
+                  f"(arch plan had dp_mode={arch.plan.dp_mode!r})")
+        overrides.update(overlap=True, dp_mode="ddp")
     setup = ts.build(arch, mesh, **overrides)
     sched = ""
     if setup.overlap:
         from repro.train import overlap as overlap_mod
         sched = f" overlap={overlap_mod.effective_schedule(setup)}"
     print(f"[train] arch={arch.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"dp_mode={arch.plan.dp_mode} fsdp={setup.fsdp_axes} "
+          f"dp_mode={setup.arch.plan.dp_mode} zero1={setup.zero1} "
+          f"fsdp={setup.fsdp_axes} accum={args.accum} "
           f"agg={setup.agg_cfg.compressor}@{setup.agg_cfg.compress_axes}"
           f"{sched}")
 

@@ -7,7 +7,13 @@ multi-device CPU host mesh and reports wall times:
                order, barrier-pinned) — the paper's optimized baseline;
   ``serial``   same fused program, all collectives after the backward;
   ``unfused``  backward and aggregation in separate dispatches — the
-               no-overlap strawman (PyTorch backward() then allreduce).
+               no-overlap strawman (PyTorch backward() then allreduce;
+               skipped under ``--accum > 1``).
+
+``--zero1`` owner-shards the optimizer state along bucket boundaries and
+``--accum N`` runs N microbatches with flush-on-final-microbatch — the
+generalized overlap regimes (docs/overlap.md), measured under the same
+round-robin protocol.
 
 Must run in a FRESH process (it forces the host device count and the
 latency-hiding-scheduler flags before jax initializes); the
@@ -37,6 +43,12 @@ def main(argv=None) -> None:
                     metavar="FIELD=VALUE",
                     help="extra ParallelPlan override (repeatable), e.g. "
                          "--plan powersgd_rank=8 --plan qsgd_bits=4")
+    ap.add_argument("--zero1", action="store_true",
+                    help="owner-shard the optimizer state along bucket "
+                         "boundaries (plan.zero1=True)")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches per step "
+                         "(the unfused strawman is skipped when > 1)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--bucket-mb", type=int, default=1,
@@ -48,10 +60,13 @@ def main(argv=None) -> None:
                     help="emit one JSON line as the last stdout line")
     args = ap.parse_args(argv)
 
-    from repro.train.overlap import enable_overlap_flags
+    # mutate XLA_FLAGS before ANY repro/jax import — repro.train.overlap
+    # pulls in the jax import chain, and flags set after jax initializes
+    # are silently ignored
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
         + f" --xla_force_host_platform_device_count={args.devices}")
+    from repro.train.overlap import enable_overlap_flags
     enable_overlap_flags()
 
     import dataclasses
@@ -72,10 +87,11 @@ def main(argv=None) -> None:
         k, _, v = kv.partition("=")
         plan_overrides[k] = coerce_kv(v)
     cfg = base.reduced(base.get(args.arch))
+    plan_fields = dict(dp_mode="ddp", zero1=args.zero1, overlap=True,
+                       compression=args.method, bucket_mb=args.bucket_mb)
+    plan_fields.update(plan_overrides)      # explicit --plan wins
     cfg = dataclasses.replace(cfg, plan=dataclasses.replace(
-        cfg.plan, dp_mode="ddp", zero1=False, overlap=True,
-        compression=args.method, bucket_mb=args.bucket_mb,
-        **plan_overrides))
+        cfg.plan, **plan_fields))
     mesh = make_mesh((args.devices, 1), ("data", "model"))
     setup = ts.build(cfg, mesh)
     ov = overlap.build_layout(setup)
@@ -102,22 +118,24 @@ def main(argv=None) -> None:
                     times.append(time.perf_counter() - t0)
         return {k: min(run[2]) for k, run in runs.items()}
 
-    t = timed_interleaved({
-        "serial": overlap.make_step(setup, "serial"),
-        "overlap": overlap.make_step(setup, "overlap"),
-        "unfused": overlap.make_unfused_step(setup),
-    })
-    t_serial, t_overlap, t_unfused = (t["serial"], t["overlap"],
-                                      t["unfused"])
+    builders = {
+        "serial": overlap.make_step(setup, "serial", accum=args.accum),
+        "overlap": overlap.make_step(setup, "overlap", accum=args.accum),
+    }
+    if args.accum == 1:
+        # the two-dispatch strawman has no accumulated variant
+        builders["unfused"] = overlap.make_unfused_step(setup)
+    t = timed_interleaved(builders)
+    t_serial, t_overlap = t["serial"], t["overlap"]
 
     rec = dict(
         arch=cfg.name, method=args.method, workers=args.devices,
+        zero1=args.zero1, accum=args.accum,
         plan_overrides=plan_overrides or None,
         n_buckets=ov.layout.n_buckets,
         effective_schedule=overlap.effective_schedule(setup),
         t_serial_us=round(t_serial * 1e6, 1),
         t_overlap_us=round(t_overlap * 1e6, 1),
-        t_unfused_us=round(t_unfused * 1e6, 1),
         overlap_vs_serial=round(t_overlap / t_serial, 4),
         # measured Fig-2 analogue: step-time saving from fusing the
         # collectives into the backward vs issuing them all after it
@@ -126,10 +144,13 @@ def main(argv=None) -> None:
         # fused program; on real interconnects it is the worst case.
         fig2_saving_pct=round((1 - t_overlap / t_serial) * 100, 2),
     )
+    if "unfused" in t:
+        rec["t_unfused_us"] = round(t["unfused"] * 1e6, 1)
     print(f"[overlap_bench] {rec['arch']} method={rec['method']} "
-          f"p={rec['workers']} buckets={rec['n_buckets']}: "
+          f"p={rec['workers']} zero1={rec['zero1']} accum={rec['accum']} "
+          f"buckets={rec['n_buckets']}: "
           f"serial={rec['t_serial_us']}us overlap={rec['t_overlap_us']}us "
-          f"unfused={rec['t_unfused_us']}us "
+          f"unfused={rec.get('t_unfused_us', '-')}us "
           f"(fig2 saving {rec['fig2_saving_pct']}%)", file=sys.stderr)
     if args.json:
         print(json.dumps(rec))

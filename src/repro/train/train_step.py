@@ -6,9 +6,18 @@ Two DP modes (DESIGN.md §4):
   ddp   params replicated over DP.  Gradients are raveled into 25 MB buckets
         and each bucket is aggregated by the configured compressor across
         the DP axes — the JAX analogue of PyTorch-DDP + comm-hook that the
-        paper benchmarks.  Optional ZeRO-1: each DP rank updates a 1/p slice
-        of every bucket (optimizer state sharded) and all-gathers the
-        updated parameters.
+        paper benchmarks.  ``plan.overlap=True`` swaps in the segmented
+        backward with reverse-order bucket collectives fused between
+        stages (repro.train.overlap — the paper's optimized baseline);
+        ``accum > 1`` accumulates microbatches (overlap mode flushes each
+        bucket once, on the final microbatch).  Optional ZeRO-1: the
+        optimizer state is owner-sharded ALONG bucket boundaries
+        (``bucketing.owner_plan``: each bucket has one owner rank, a
+        rank's shard is one contiguous slice of the flat bucket space);
+        ``zero1_apply`` runs flat AdamW on the owned fp32 master and
+        all-gathers the updated working-dtype params through the Payload
+        reduce machinery.  One zero1 implementation serves the classic,
+        segmented, and unfused steps.
   fsdp  params sharded over ctx.fsdp_axes (+ TP); the per-layer all_gather's
         AD transpose IS the ZeRO-3 reduce-scatter.  With HSDP (fsdp over
         "data" only) the surviving pod-axis reduction runs the compressor on
@@ -194,30 +203,63 @@ def _bucket_layout(setup: TrainSetup):
     """The bucket layout the compressor state / ZeRO-1 shards key off.
     Overlap mode uses the leaf-aligned layout over backward-completion-
     ordered leaves (repro.train.overlap); classic mode keeps the
-    byte-based flat split."""
+    byte-based flat split.  Memoized on the setup (keyed by bucket_mb,
+    like overlap.build_layout) — state specs, init, zero1 plan, and
+    checkpoint shapes all read it."""
     if setup.overlap:
         from repro.train import overlap as overlap_mod
         return overlap_mod.build_layout(setup).layout
-    return bucketing.layout_for(_grads_like_local(setup),
-                                setup.agg_cfg.bucket_mb)
+    cached = getattr(setup, "_layout_cache", None)
+    if cached is not None and cached[0] == setup.agg_cfg.bucket_mb:
+        return cached[1]
+    layout = bucketing.layout_for(_grads_like_local(setup),
+                                  setup.agg_cfg.bucket_mb)
+    setup._layout_cache = (setup.agg_cfg.bucket_mb, layout)
+    return layout
 
 
-def _zero1_shard_len(setup: TrainSetup, size: int) -> int:
-    p = setup.p_dp
-    return -(-size // p)
+def _zero1_plan(setup: TrainSetup) -> bucketing.OwnerPlan:
+    """The bucket -> owner-rank sharding of the optimizer state (ZeRO-1:
+    shard boundaries are the bucket boundaries of ``_bucket_layout``)."""
+    return bucketing.owner_plan(_bucket_layout(setup), setup.p_dp)
+
+
+def _zero1_bucket_fns(setup: TrainSetup, layout, ov=None):
+    """(``buckets_of(tree)``, ``unbuckets(buckets, like)``) in the
+    layout's leaf order — backward-completion order under overlap, plain
+    pytree order otherwise.  ``ov`` lets the overlap step pass its own
+    ``OverlapLayout`` instead of rebuilding it."""
+    if setup.overlap:
+        from repro.train import overlap as overlap_mod
+        if ov is None:
+            ov = overlap_mod.build_layout(setup)
+
+        def buckets_of(tree):
+            return bucketing.leaves_to_buckets(
+                overlap_mod._ordered_leaves(ov, tree), layout)
+
+        def unbuckets(buckets, like):
+            ordered_like = overlap_mod._ordered_leaves(ov, like)
+            leaves = bucketing.buckets_to_leaves(buckets, ordered_like,
+                                                 layout)
+            return overlap_mod._unordered_tree(ov, leaves, like)
+    else:
+        def buckets_of(tree):
+            return bucketing.to_buckets(tree, layout)
+
+        def unbuckets(buckets, like):
+            return bucketing.from_buckets(buckets, like, layout)
+    return buckets_of, unbuckets
 
 
 def _state_specs(setup: TrainSetup):
     pspecs = setup.param_specs
     all_ax = setup.all_axes
-    dev = P(all_ax)        # flat per-device 1-D state
+    dev = P(all_ax)        # leading device dim, as for compressor state
     spec: dict = {"step": P(), "params": pspecs}
     if setup.zero1:
-        layout = _bucket_layout(setup)
         spec["opt"] = {"t": P(),
-                       "buckets": tuple(
-                           {"master": dev, "m": dev, "v": dev}
-                           for _ in range(layout.n_buckets))}
+                       "shard": {"master": dev, "m": dev, "v": dev}}
     else:
         opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg, pspecs)
         spec["opt"] = opt.state_specs(pspecs)
@@ -264,14 +306,11 @@ def init_state(setup: TrainSetup, key: jax.Array):
         params, _ = setup.model.init(key, setup.ctx)
         state: dict = {"step": jnp.zeros((), jnp.int32), "params": params}
         if setup.zero1:
-            shard_lens = [_zero1_shard_len(setup, s) for s in layout.sizes]
+            cap = _zero1_plan(setup).cap
             state["opt"] = {
                 "t": jnp.zeros((), jnp.int32),
-                "buckets": tuple(
-                    {"master": jnp.zeros((sl * n_dev,), jnp.float32),
-                     "m": jnp.zeros((sl * n_dev,), jnp.float32),
-                     "v": jnp.zeros((sl * n_dev,), jnp.float32)}
-                    for sl in shard_lens)}
+                "shard": {k: jnp.zeros((n_dev, cap), jnp.float32)
+                          for k in ("master", "m", "v")}}
         else:
             opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg,
                                setup.param_specs)
@@ -321,35 +360,116 @@ def fresh_agg_state(setup: TrainSetup, key):
     return jax.jit(init_fn, out_shardings=shardings)(key)
 
 
-def _fill_zero1_master(setup: TrainSetup, state, layout):
-    """Slice each (local) param bucket's DP shard into the fp32 master."""
+def _zero1_own_slice(setup: TrainSetup, layout, plan: bucketing.OwnerPlan,
+                     buckets: list) -> jax.Array:
+    """This DP rank's owned shard, (cap,) fp32: concat the buckets, pad so
+    every rank's static-length slice stays in range, and slice from the
+    rank-indexed start (ownership runs are contiguous — OwnerPlan)."""
+    cap = plan.cap
+    pad = max(s + cap for s in plan.starts) - layout.n_elements
+    parts = [b.astype(jnp.float32).reshape(-1) for b in buckets]
+    if pad:
+        parts.append(jnp.zeros((pad,), jnp.float32))
+    flat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    dp = tuple(setup.dp_axes)
+    rank = jax.lax.axis_index(dp) if dp else jnp.int32(0)
+    starts = jnp.asarray(plan.starts, jnp.int32)
+    return jax.lax.dynamic_slice_in_dim(flat, starts[rank], cap)
+
+
+def zero1_apply(setup: TrainSetup, layout, plan: bucketing.OwnerPlan,
+                buckets_of, unbuckets, params, grads, opt_state, lr):
+    """Owner-sharded ZeRO-1 AdamW step (shared by the classic and the
+    overlapped/segmented steps — which is what keeps the serial and
+    overlap schedules bit-identical under ``zero1=True``):
+
+      1. clip grads by global norm (same semantics as ``AdamW.update``),
+      2. slice this rank's OWNED buckets out of the aggregated gradient,
+      3. flat AdamW on the fp32 master shard (``flat_adamw_update``),
+      4. all-gather the updated working-dtype params through the Payload
+         reduce machinery (a parameter shard is a non-associative payload:
+         every peer needs every owner's tensors verbatim),
+      5. reassemble the parameter pytree from the gathered buckets.
+
+    Returns ``(new_params, new_opt_state, grad_norm)``.
+    """
+    from repro.core.compression import base as cbase
+    c = setup.opt_cfg
+    assert c.name == "adamw", "zero1 shards flat AdamW state"
+    if c.grad_clip:
+        grads, gnorm = opt_mod.clip_by_global_norm(
+            grads, setup.param_specs, c.grad_clip)
+    else:
+        gnorm = opt_mod.global_norm(grads, setup.param_specs)
+    t = opt_state["t"] + 1
+    g_own = _zero1_own_slice(setup, layout, plan, buckets_of(grads))
+    st = jax.tree.map(lambda x: x[0], opt_state["shard"])
+    master, mv = opt_mod.flat_adamw_update(
+        st["master"], g_own, {"m": st["m"], "v": st["v"]}, t, lr, c)
+    payload = cbase.Payload({"shard": master.astype(layout.dtype)},
+                            associative=False)
+    gathered = cbase.reduce_payload(payload, setup.dp_axes) \
+        .tensors["shard"]                       # (p_dp, cap)
+    flat_p = gathered.reshape(-1)
+    new_buckets = [
+        jax.lax.slice_in_dim(flat_p, plan.param_offset(b),
+                             plan.param_offset(b) + layout.sizes[b])
+        for b in range(layout.n_buckets)]
+    new_params = unbuckets(new_buckets, params)
+    new_opt = {"t": t,
+               "shard": jax.tree.map(lambda x: x[None],
+                                     {"master": master, **mv})}
+    return new_params, new_opt, gnorm
+
+
+def make_update_fn(setup: TrainSetup, layout, ov=None):
+    """The optimizer leg shared by the classic, segmented, and unfused
+    steps: ``update(params, grads, opt_state, lr) -> (new_params,
+    new_opt, grad_norm)`` — owner-sharded flat AdamW under ZeRO-1, the
+    configured ``Optimizer`` otherwise.  ONE implementation is what
+    keeps the serial and overlapped schedules bit-identical."""
+    if setup.zero1:
+        plan = _zero1_plan(setup)
+        buckets_of, unbuckets = _zero1_bucket_fns(setup, layout, ov)
+
+        def update(params, grads, opt_state, lr):
+            return zero1_apply(setup, layout, plan, buckets_of, unbuckets,
+                               params, grads, opt_state, lr)
+    else:
+        def update(params, grads, opt_state, lr):
+            opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg,
+                               setup.param_specs)
+            new_params, new_opt, om = opt.update(grads, opt_state, params,
+                                                 lr)
+            return new_params, new_opt, om["grad_norm"]
+    return update
+
+
+def train_metrics(setup: TrainSetup, loss_sum, ntok, gnorm, moe_aux):
+    """The step's metrics dict (loss is the DP-global token mean)."""
     dp = setup.dp_axes
-    p_dp = setup.p_dp
+    loss_g = jax.lax.psum(loss_sum, dp) if dp else loss_sum
+    ntok_g = jax.lax.psum(ntok, dp) if dp else ntok
+    return {"loss": loss_g / jnp.maximum(ntok_g.astype(jnp.float32), 1.0),
+            "tokens": ntok_g,
+            "grad_norm": gnorm,
+            "moe_aux": moe_aux}
 
-    def fill(params, buckets):
-        p_buckets = bucketing.to_buckets(params, layout)
-        out = []
-        rank = jax.lax.axis_index(dp)
-        for i, pb in enumerate(p_buckets):
-            sl = _zero1_shard_len(setup, layout.sizes[i])
-            pad = sl * p_dp - layout.sizes[i]
-            if pad:
-                pb = jnp.pad(pb, (0, pad))
-            master = jax.lax.dynamic_slice_in_dim(
-                pb.astype(jnp.float32), rank * sl, sl)
-            out.append({**jax.tree.map(lambda x: x, buckets[i]),
-                        "master": master[None]})
-        return tuple(out)
 
-    pspec = setup.param_specs
-    bspec = setup.state_specs["opt"]["buckets"]
-    # inside shard_map the per-device state carries the leading device dim
-    bspec_local = tuple(
-        {k: P(setup.all_axes) for k in b} for b in bspec)
-    f = shard_map(fill, setup.mesh, in_specs=(pspec, bspec),
-                  out_specs=bspec)
-    new_buckets = jax.jit(f)(state["params"], state["opt"]["buckets"])
-    state["opt"] = {**state["opt"], "buckets": new_buckets}
+def _fill_zero1_master(setup: TrainSetup, state, layout):
+    """Initialize each rank's fp32 master from its owned param buckets."""
+    plan = _zero1_plan(setup)
+    buckets_of, _ = _zero1_bucket_fns(setup, layout)
+
+    def fill(params, shard):
+        master = _zero1_own_slice(setup, layout, plan, buckets_of(params))
+        return {"master": master[None], "m": shard["m"], "v": shard["v"]}
+
+    sspec = setup.state_specs["opt"]["shard"]
+    f = shard_map(fill, setup.mesh, in_specs=(setup.param_specs, sspec),
+                  out_specs=sspec)
+    new_shard = jax.jit(f)(state["params"], state["opt"]["shard"])
+    state["opt"] = {**state["opt"], "shard": new_shard}
     return state
 
 
@@ -359,10 +479,9 @@ def _fill_zero1_master(setup: TrainSetup, state, layout):
 def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
     """Returns a jitted ``step(state, batch, lr) -> (state, metrics)``."""
     if setup.overlap:
-        assert accum == 1, "overlap + gradient accumulation unsupported"
         from repro.train import overlap as overlap_mod
         return overlap_mod.make_step(setup, schedule="overlap",
-                                     xent_chunk=xent_chunk)
+                                     accum=accum, xent_chunk=xent_chunk)
     model = setup.model
     ctx = setup.ctx
     arch = setup.arch
@@ -423,32 +542,7 @@ def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
             return grads
         return jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
 
-    def zero1_update(params, grads, opt_state, lr):
-        """Flat-bucket ZeRO-1: slice DP shard, update, all-gather params."""
-        t = opt_state["t"] + 1
-        g_buckets = bucketing.to_buckets(grads, layout)
-        rank = jax.lax.axis_index(dp)
-        new_p, new_b = [], []
-        for i, gb in enumerate(g_buckets):
-            sl = _zero1_shard_len(setup, layout.sizes[i])
-            pad = sl * p_dp - layout.sizes[i]
-            if pad:
-                gb = jnp.pad(gb, (0, pad))
-            gs = jax.lax.dynamic_slice_in_dim(gb.astype(jnp.float32),
-                                              rank * sl, sl)
-            st = jax.tree.map(lambda x: x[0], opt_state["buckets"][i])
-            master, st2 = opt_mod.flat_adamw_update(
-                st["master"], gs, {"m": st["m"], "v": st["v"]}, t, lr,
-                setup.opt_cfg)
-            new_b.append(jax.tree.map(lambda x: x[None],
-                                      {"master": master, **st2}))
-            full = jax.lax.all_gather(master.astype(layout.dtype), dp,
-                                      axis=0, tiled=True)
-            if pad:
-                full = full[:layout.sizes[i]]
-            new_p.append(full)
-        params_out = bucketing.from_buckets(new_p, params, layout)
-        return params_out, {"t": t, "buckets": tuple(new_b)}
+    update_fn = make_update_fn(setup, layout)
 
     def one_micro(params, batch):
         (scaled, (loss_sum, ntok, aux)), grads = grad_fn(params, batch)
@@ -482,24 +576,9 @@ def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
         else:
             grads, new_agg = aggregate(grads, state["agg"])
 
-        if setup.zero1:
-            new_params, new_opt = zero1_update(params, grads,
+        new_params, new_opt, gnorm = update_fn(params, grads,
                                                state["opt"], lr)
-            gnorm = opt_mod.global_norm(grads, setup.param_specs)
-        else:
-            opt = opt_mod.make(setup.opt_cfg.name, setup.opt_cfg,
-                               setup.param_specs)
-            new_params, new_opt, om = opt.update(grads, state["opt"],
-                                                 params, lr)
-            gnorm = om["grad_norm"]
-
-        loss_g = jax.lax.psum(loss_sum, dp) if dp else loss_sum
-        ntok_g = jax.lax.psum(ntok, dp) if dp else ntok
-        metrics = {"loss": loss_g / jnp.maximum(
-                       ntok_g.astype(jnp.float32), 1.0),
-                   "tokens": ntok_g,
-                   "grad_norm": gnorm,
-                   "moe_aux": aux}
+        metrics = train_metrics(setup, loss_sum, ntok, gnorm, aux)
         new_state = {"step": state["step"] + 1, "params": new_params,
                      "opt": new_opt, "agg": new_agg}
         return new_state, metrics

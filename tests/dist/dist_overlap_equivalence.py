@@ -11,7 +11,13 @@ differs.  Training results must therefore be bit-identical, for the raw
   * the classic scan-based step agrees with the segmented step to fp
     tolerance (different XLA programs — unrolled vs scanned — so only
     allclose, not bitwise);
-  * the unfused two-dispatch strawman agrees to fp tolerance.
+  * the unfused two-dispatch strawman agrees to fp tolerance;
+  * the enc-dec (audio) family — two segmented stacks, decoder then
+    encoder, under its default ZeRO-1 plan — is bit-identical
+    serial-vs-overlapped and fp-agrees with the classic step.
+
+(The ZeRO-1 × accum regime matrix has its own oracle:
+tests/dist/dist_zero1_accum.py.)
 """
 import os
 
@@ -110,7 +116,50 @@ def main():
                                    err_msg="segmented vs unfused loss")
     print("  none: fused vs unfused strawman loss agrees (fp tol)")
 
+    # enc-dec: two segmented stacks (decoder then encoder) under the
+    # arch's default ZeRO-1 plan
+    audio_equivalence()
+
     print("OK dist_overlap_equivalence")
+
+
+def audio_batches():
+    cfg = base.reduced(base.get("seamless-m4t-medium"))
+    cfg = dataclasses.replace(cfg, vocab=64, plan=dataclasses.replace(
+        cfg.plan, bucket_mb=1, overlap=True))
+    key = jax.random.key(1)
+    B, S = 8, 32
+    out = []
+    for i in range(STEPS):
+        k = jax.random.fold_in(key, i)
+        toks = jax.random.randint(k, (B, S + 1), 0, 64)
+        enc = jax.random.normal(jax.random.fold_in(k, 99),
+                                (B, S, cfg.d_model))
+        out.append({"enc_embeds": enc, "tokens": toks[:, :S],
+                    "labels": toks[:, 1:]})
+    return cfg, out
+
+
+def audio_equivalence():
+    cfg, batches = audio_batches()
+    assert cfg.plan.zero1         # seamless ships ZeRO-1 by default
+    mesh = make_mesh((4, 1), ("data", "model"))
+    setup = ts.build(cfg, mesh)
+    s_ser, m_ser = run(setup, overlap.make_step(setup, "serial"), batches)
+    s_ovl, m_ovl = run(setup, overlap.make_step(setup, "overlap"), batches)
+    assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
+                         "audio: serial vs overlapped")
+    print(f"  audio (enc-dec, zero1): serial == overlapped bit-identical "
+          f"({STEPS} steps)")
+
+    classic = dataclasses.replace(
+        cfg, plan=dataclasses.replace(cfg.plan, overlap=False))
+    setup_c = ts.build(classic, mesh)
+    s_cls, m_cls = run(setup_c, ts.make_step(setup_c), batches)
+    for a, b in zip(m_ser, m_cls):
+        np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-3,
+                                   err_msg="audio segmented vs classic")
+    print("  audio: segmented vs classic scan step loss agrees (fp tol)")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ SCRIPTS = [
     "dist_equivalence.py",
     "dist_fault_tolerance.py",
     "dist_overlap_equivalence.py",
+    "dist_zero1_accum.py",
 ]
 
 

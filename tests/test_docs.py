@@ -1,0 +1,59 @@
+"""The front door can't rot: every relative markdown link in README.md
+and docs/ must resolve to a real file, and the README/docs/index
+cross-link topology the docs promise must actually exist.  CI's
+docs-check job runs this plus the README quickstart commands.
+"""
+import os
+import re
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(ROOT, "docs"))
+    if f.endswith(".md"))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _links(path):
+    text = open(os.path.join(ROOT, path)).read()
+    return [m.group(1) for m in _LINK.finditer(text)]
+
+
+@pytest.mark.parametrize("doc", DOC_FILES)
+def test_relative_links_resolve(doc):
+    missing = []
+    for link in _links(doc):
+        if link.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = link.split("#", 1)[0]
+        if not target:
+            continue
+        resolved = os.path.normpath(
+            os.path.join(ROOT, os.path.dirname(doc), target))
+        if not os.path.exists(resolved):
+            missing.append(link)
+    assert not missing, f"{doc}: dead links {missing}"
+
+
+def test_front_door_topology():
+    """README links the docs index and every API doc is reachable from it;
+    each doc links back to the index (cross-linked both ways)."""
+    readme = set(_links("README.md"))
+    assert "docs/index.md" in readme
+    index = set(_links("docs/index.md"))
+    for doc in ("compression_api.md", "overlap.md", "experiments_api.md"):
+        assert doc in index, f"docs/index.md missing link to {doc}"
+        back = set(_links(os.path.join("docs", doc)))
+        assert "index.md" in back, f"docs/{doc} does not link back to index"
+    assert "../README.md" in index
+
+
+def test_readme_mentions_tier1_and_headline():
+    """The quickstart commands CI runs must stay in the README verbatim."""
+    text = open(os.path.join(ROOT, "README.md")).read()
+    assert "python -m pytest -x -q" in text
+    assert "whatif_analysis.py --matrix" in text
+    assert "15/216" in text

@@ -65,10 +65,10 @@ def test_spec_hash_stability():
     b = ExperimentSpec(workload="resnet50", method="signsgd", workers=8)
     assert a.spec_hash() == b.spec_hash()
     assert a.spec_hash() != dataclasses.replace(a, workers=16).spec_hash()
-    # wire-format rev 2: the ``overlap`` baseline knob joined the spec
-    # (PR 3); old stored rows still load via from_json defaults, but
-    # hashes intentionally moved.
-    assert a.spec_hash() == "61be30756824ba9b", a.spec_hash()
+    # wire-format rev 3: the ``zero1`` and ``accum`` knobs joined the
+    # spec (rev 2 added ``overlap``); old stored rows still load via
+    # from_json defaults, but hashes intentionally moved.
+    assert a.spec_hash() == "9b265ece225971dc", a.spec_hash()
 
 
 def test_paper_matrix_size_and_uniqueness():
@@ -249,3 +249,30 @@ def test_measured_backend_dryrun_missing_artifact(tmp_path):
                           shape="train_4k", mesh="multi", method="plan")
     r = MeasuredBackend(art_dir=str(tmp_path)).run(spec)
     assert r.status == "missing"
+
+
+def test_measured_backend_dryrun_resume_retries_errors(tmp_path):
+    """Artifact reuse (the dryrun CLI's --resume) covers ok/skipped cells
+    only: an error artifact (possibly a transient compile failure) is
+    retried, not replayed forever."""
+    from unittest import mock
+    spec = ExperimentSpec(workload="a", kind="dryrun", shape="s",
+                          mesh="single", method="plan")
+    path = tmp_path / "a__s__single.json"
+    backend = MeasuredBackend(art_dir=str(tmp_path), compile_missing=True,
+                              reuse_artifacts=True)
+
+    path.write_text(json.dumps(dict(cell="a__s__single",
+                                    status="skipped", reason="n/a")))
+    with mock.patch("repro.launch.dryrun.run_cell") as rc:
+        assert backend.run(spec).status == "skipped"
+        rc.assert_not_called()                    # skipped cells reused
+
+    path.write_text(json.dumps(dict(cell="a__s__single",
+                                    status="error", error="boom")))
+    with mock.patch("repro.launch.dryrun.run_cell",
+                    return_value=dict(status="skipped",
+                                      reason="retried")) as rc:
+        r = backend.run(spec)
+        rc.assert_called_once()                   # error cells retried
+        assert r.status == "skipped" and r.error == "retried"
