@@ -62,6 +62,14 @@ class ParallelPlan:
     # finding: compress only the low-bandwidth (DCN) axis.
     compression: str = "none"
     compress_axes: str = "pod"    # "pod" | "all"
+    # collective schedule moving each aggregation payload (a CommPlan kind,
+    # docs/comm_api.md): "auto" (resolve from payload associativity — the
+    # historic dispatch) | "allreduce" | "reduce_scatter_allgather" |
+    # "reduce_to_owner_broadcast" (zero1 + uncompressed only: the owner's
+    # updated params ride the broadcast leg, halving exchanged bytes) |
+    # "gather_all" | "hierarchical[:intra+axes]".  Associativity VALIDATES
+    # the choice instead of dispatching it.
+    comm: str = "auto"
     powersgd_rank: int = 4
     topk_frac: float = 0.01
     qsgd_bits: int = 8

@@ -17,6 +17,11 @@ Two entry points:
       averaged the ICI axes; the compressor runs on the local shard across
       the pod axis only.
 
+Which collective moves each payload is the aggregator config's
+``CommPlan`` (``repro.parallel.commplan`` / docs/comm_api.md); the
+payload's associativity validates the plan choice, and the ``auto``
+default reproduces the historic dispatch.
+
 All functions are called inside ``shard_map``.
 """
 from __future__ import annotations
@@ -29,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import bucketing
 from repro.core.compression import base as cbase
+from repro.parallel import commplan as cp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +44,9 @@ class AggregatorConfig:
     raw_axes: Sequence[str] = ("data",)
     bucket_mb: int = 25
     compressor_kwargs: dict = dataclasses.field(default_factory=dict)
+    #: the collective schedule moving each payload (docs/comm_api.md);
+    #: ``auto`` = the historic associativity dispatch.
+    comm: cp.CommPlan = dataclasses.field(default_factory=cp.CommPlan)
 
     def build(self) -> cbase.Compressor:
         return cbase.make(self.compressor, **self.compressor_kwargs)
@@ -64,18 +73,24 @@ class GradAggregator:
 
     # ---------- reduce phase ----------
     def reduce(self, payload: cbase.Payload,
-               axes: Optional[Sequence[str]] = None) -> cbase.Payload:
+               axes: Optional[Sequence[str]] = None,
+               plan: Optional[cp.CommPlan] = None) -> cbase.Payload:
         """Move one payload across the mesh: the public entry point to the
         shared ``reduce_payload`` helper (the same function every
-        compressor's ``encode_and_reduce`` goes through), defaulting to the
-        configured compress axes.  The collective is selected from the
-        payload's wire spec: associative payloads all-reduce (pmean,
-        constant in p); the rest all-gather (linear in p).  Use this when
-        composing the phases manually (benchmarks, plugins); the training
-        paths below compose via ``Compressor.encode_and_reduce`` so
-        multi-round schemes keep their structure."""
+        compressor's ``encode_and_reduce`` goes through), defaulting to
+        the configured compress axes and the configured ``CommPlan``
+        (docs/comm_api.md).  The payload's associativity *validates* the
+        plan (mean-reducing plans need an associative payload); under the
+        default ``auto`` plan it resolves the historic dispatch —
+        associative payloads all-reduce (pmean, constant in p), the rest
+        all-gather (linear in p).  Use this when composing the phases
+        manually (benchmarks, plugins); the training paths below compose
+        via ``Compressor.encode_and_reduce`` so multi-round schemes keep
+        their structure."""
         axes = tuple(axes if axes is not None else self.cfg.compress_axes)
-        return cbase.reduce_payload(payload, axes)
+        return cbase.reduce_payload(payload, axes,
+                                    plan if plan is not None
+                                    else self.cfg.comm)
 
     # ---------- DDP path ----------
     def aggregate_bucket_list(self, buckets, states):
@@ -99,15 +114,18 @@ class GradAggregator:
 
     def aggregate_one(self, bucket: jax.Array, state: Any):
         """One bucket through the three-phase pipeline:
-        encode -> reduce (collective picked from the payload) -> decode."""
+        encode -> reduce (collective selected by ``cfg.comm``, validated
+        against the payload) -> decode."""
         raw, comp = tuple(self.cfg.raw_axes), tuple(self.cfg.compress_axes)
+        plan = self.cfg.comm
         if self.cfg.compressor == "none":
-            return jax.lax.pmean(bucket, raw + comp), state
+            return cp.mean_reduce(bucket, raw + comp, plan), state
         if raw:
-            # hierarchical: raw mean over ICI first (cheap), compress the
-            # pod-axis reduction only
+            # axis-policy hierarchy: raw mean over ICI first (cheap),
+            # compress the pod-axis reduction only
             bucket = jax.lax.pmean(bucket, raw)
-        payload = self.compressor.encode_and_reduce(bucket, state, comp)
+        payload = self.compressor.encode_and_reduce(bucket, state, comp,
+                                                    plan)
         return self.compressor.decode(payload, bucket, state)
 
     # ---------- FSDP path ----------
@@ -115,16 +133,42 @@ class GradAggregator:
         """shard: local 1-D gradient shard, already reduce-scattered over the
         raw axes.  Compress-aggregate across the compress (pod) axis."""
         comp = tuple(self.cfg.compress_axes)
+        plan = self.cfg.comm
         if self.cfg.compressor == "none":
-            return jax.lax.pmean(shard, comp), state
-        payload = self.compressor.encode_and_reduce(shard, state, comp)
+            return cp.mean_reduce(shard, comp, plan), state
+        payload = self.compressor.encode_and_reduce(shard, state, comp,
+                                                    plan)
         return self.compressor.decode(payload, shard, state)
+
+
+def comm_from_plan(plan) -> cp.CommPlan:
+    """Resolve ``ParallelPlan.comm`` into a validated :class:`CommPlan`:
+    the plan must be legal for the configured compressor's associativity
+    (associativity constrains plan choice — docs/comm_api.md), and
+    ``reduce_to_owner_broadcast`` additionally needs a sharded consumer
+    (``zero1`` + uncompressed: the broadcast leg carries the owner's
+    updated params; anything else degenerates to the two-shot ring and is
+    rejected rather than silently mis-costed)."""
+    comm = cp.CommPlan.parse(getattr(plan, "comm", "auto"))
+    if comm.kind != "auto":
+        comp = cbase.make(plan.compression, **cbase.plan_kwargs(plan))
+        comm.validate(comp.associative)
+    if comm.kind == "reduce_to_owner_broadcast" and not (
+            getattr(plan, "zero1", False) and plan.compression == "none"):
+        raise cp.CommPlanError(
+            "comm='reduce_to_owner_broadcast' requires zero1=True and "
+            "compression='none': the broadcast leg carries the owner's "
+            "updated parameter shard, so without an owner-sharded update "
+            "it degenerates to reduce_scatter_allgather (use that "
+            "instead)")
+    return comm
 
 
 def from_plan(plan, multi_pod: bool) -> AggregatorConfig:
     """Translate an ArchConfig.plan into the aggregation policy.  The
     compressor kwargs come from the registry's declarative spec — the one
-    plan -> kwargs mapping in the codebase."""
+    plan -> kwargs mapping in the codebase; the comm schedule comes from
+    ``plan.comm`` via :func:`comm_from_plan`."""
     kw = cbase.plan_kwargs(plan)
     if plan.compress_axes == "all":
         compress_axes: tuple[str, ...] = (("pod", "data") if multi_pod
@@ -145,4 +189,5 @@ def from_plan(plan, multi_pod: bool) -> AggregatorConfig:
         raw_axes=raw_axes,
         bucket_mb=plan.bucket_mb,
         compressor_kwargs=kw,
+        comm=comm_from_plan(plan),
     )

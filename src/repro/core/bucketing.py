@@ -24,7 +24,11 @@ ZeRO-1 shards the optimizer state ALONG bucket boundaries:
 ``owner_plan(layout, n_ranks)`` assigns each bucket one owner rank in
 contiguous balanced runs (``OwnerPlan``), so a rank's shard is a single
 static-length slice of the flat bucket space — the SPMD-friendly form
-``train_step.zero1_apply`` slices, updates, and all-gathers.
+``train_step.zero1_apply`` slices, updates, and all-gathers.  When there
+are fewer buckets than ranks, the largest buckets are split at element
+midpoints (``split_for_coverage``) so every rank still owns one
+contiguous sub-bucket; split buckets reassemble from their per-owner
+``OwnerPlan.pieces``.
 """
 from __future__ import annotations
 
@@ -215,19 +219,30 @@ def map_buckets(fn: Callable, tree, layout: BucketLayout):
 class OwnerPlan:
     """Bucket-granular ZeRO-1 sharding over the DP ranks.
 
-    Each bucket is owned by exactly ONE rank; a rank's optimizer shard is
-    the concatenation of its owned buckets.  Ownership runs are contiguous
-    in bucket order (rank r owns buckets ``[first_r, last_r]``), so a
-    rank's shard is one contiguous slice ``[starts[r], starts[r] +
-    lengths[r])`` of the flat bucket-concat space — sliceable with a
-    static length (``cap``) from a rank-indexed start, which is what makes
-    the update SPMD-friendly (no per-rank program differences).
+    With ``n_buckets >= n_ranks`` each bucket is owned by exactly ONE
+    rank and a rank's optimizer shard is the concatenation of its owned
+    buckets.  Ownership runs are contiguous in bucket order (rank r owns
+    buckets ``[first_r, last_r]``), so a rank's shard is one contiguous
+    slice ``[starts[r], starts[r] + lengths[r])`` of the flat
+    bucket-concat space — sliceable with a static length (``cap``) from a
+    rank-indexed start, which is what makes the update SPMD-friendly (no
+    per-rank program differences).
+
+    With ``n_buckets < n_ranks`` the largest buckets are SPLIT (at
+    element midpoints, repeatedly) until one sub-bucket per rank exists,
+    restoring per-rank state that shrinks with p; a split bucket then
+    spans several owners and its gathered-space location is the
+    multi-piece ``pieces[b]`` instead of a single ``param_offset``.
     """
     n_ranks: int
-    owners: tuple[int, ...]           # bucket index -> owner rank
+    owners: tuple[int, ...]           # bucket -> owner of its FIRST element
     starts: tuple[int, ...]           # rank -> flat start offset
     lengths: tuple[int, ...]          # rank -> owned element count
     bucket_offsets: tuple[int, ...]   # bucket -> flat start offset
+    #: bucket -> ((gathered_offset, length), ...) pieces inside the
+    #: (n_ranks · cap) gathered-shard space, in element order.  A bucket
+    #: owned by one rank has exactly one piece (== ``param_offset``).
+    pieces: tuple[tuple[tuple[int, int], ...], ...] = ()
 
     @property
     def cap(self) -> int:
@@ -236,9 +251,12 @@ class OwnerPlan:
 
     def param_offset(self, b: int) -> int:
         """Offset of bucket ``b`` inside the (p, cap) gathered-shard
-        space: ``owner_row * cap + position within the owner's shard``."""
-        r = self.owners[b]
-        return r * self.cap + self.bucket_offsets[b] - self.starts[r]
+        space: ``owner_row * cap + position within the owner's shard``.
+        Only defined for single-owner buckets — split buckets are located
+        by ``pieces[b]``."""
+        assert len(self.pieces[b]) == 1, \
+            f"bucket {b} is owner-split; use pieces[{b}]"
+        return self.pieces[b][0][0]
 
 
 def assign_owner_ranks(sizes: Sequence[int], n_ranks: int
@@ -261,34 +279,98 @@ def assign_owner_ranks(sizes: Sequence[int], n_ranks: int
     return tuple(owners)
 
 
+def split_for_coverage(sizes: Sequence[int], n_ranks: int
+                       ) -> list[tuple[int, int]]:
+    """Sub-bucket list ``[(parent_bucket, size), ...]`` (flat order
+    preserved) with the LARGEST buckets split at element midpoints until
+    one sub-bucket per rank exists — the non-degenerate ZeRO-1 coverage
+    when ``len(sizes) < n_ranks``.  Stops early (still short of
+    ``n_ranks``) only when every sub-bucket is a single element."""
+    subs = [(b, int(s)) for b, s in enumerate(sizes)]
+    while len(subs) < n_ranks:
+        i = max(range(len(subs)), key=lambda j: subs[j][1])
+        b, s = subs[i]
+        if s < 2:
+            break                      # fewer elements than ranks
+        subs[i:i + 1] = [(b, s - s // 2), (b, s // 2)]
+    return subs
+
+
 def owner_plan(layout: BucketLayout, n_ranks: int) -> OwnerPlan:
     """The ZeRO-1 sharding plan for a bucket layout (any layout family:
     byte-based or leaf-aligned — ownership is per bucket either way).
 
-    Sharding is bucket-granular, so it degenerates when there are fewer
-    buckets than ranks: ``cap`` stops shrinking with p (in the limit of
-    one bucket every rank carries full-model fp32 state and the param
-    gather moves p× the useful bytes).  That configuration is still
-    *correct* (the bit-identity oracles run it), but it is not ZeRO —
-    warn so a production launch picks a smaller ``bucket_mb`` instead."""
-    if layout.n_buckets < n_ranks:
-        import warnings
-        warnings.warn(
-            f"ZeRO-1 owner sharding is degenerate: {layout.n_buckets} "
-            f"bucket(s) over {n_ranks} DP ranks — shard boundaries are "
-            f"bucket boundaries, so trailing ranks own nothing and "
-            f"per-rank state stops shrinking with p.  Lower bucket_mb "
-            f"until n_buckets >= p_dp.", stacklevel=2)
-    owners = assign_owner_ranks(layout.sizes, n_ranks)
+    Sharding is bucket-granular while ``n_buckets >= n_ranks`` (shard
+    boundaries are bucket boundaries — the historic contract, unchanged).
+    With FEWER buckets than ranks the plan no longer degenerates to
+    trailing ranks owning nothing: the largest buckets are split
+    (``split_for_coverage``) so every rank owns one contiguous sub-bucket
+    and per-rank state keeps shrinking with p; split buckets are
+    reassembled from their per-owner ``pieces``."""
     bucket_offsets, off = [], 0
     for s in layout.sizes:
         bucket_offsets.append(off)
         off += int(s)
+    if layout.n_buckets >= n_ranks:
+        owners = assign_owner_ranks(layout.sizes, n_ranks)
+        subs = [(b, int(layout.sizes[b])) for b in range(layout.n_buckets)]
+        sub_owner = list(owners)
+    else:
+        subs = split_for_coverage(layout.sizes, n_ranks)
+        sub_owner = list(range(len(subs)))
+        if len(subs) < n_ranks:
+            import warnings
+            warnings.warn(
+                f"ZeRO-1 owner sharding is degenerate even after bucket "
+                f"splitting: {layout.n_elements} element(s) over "
+                f"{n_ranks} DP ranks — trailing ranks own nothing.",
+                stacklevel=2)
+        owners = []
+        i = 0
+        for b in range(layout.n_buckets):
+            owners.append(sub_owner[i])
+            while i < len(subs) and subs[i][0] == b:
+                i += 1
+        owners = tuple(owners)
     starts, lengths = [], []
+    sub_off, sub_flat = [], 0
+    for _, s in subs:
+        sub_off.append(sub_flat)
+        sub_flat += s
     for r in range(n_ranks):
-        owned = [b for b in range(layout.n_buckets) if owners[b] == r]
-        starts.append(bucket_offsets[owned[0]] if owned
+        owned = [i for i in range(len(subs)) if sub_owner[i] == r]
+        starts.append(sub_off[owned[0]] if owned
                       else (starts[-1] + lengths[-1] if starts else 0))
-        lengths.append(sum(int(layout.sizes[b]) for b in owned))
-    return OwnerPlan(n_ranks, owners, tuple(starts), tuple(lengths),
-                     tuple(bucket_offsets))
+        lengths.append(sum(subs[i][1] for i in owned))
+    cap = max(lengths) if lengths else 0
+    ideal = -(-layout.n_elements // max(1, n_ranks))
+    if n_ranks > 1 and cap > 2 * ideal:
+        import warnings
+        warnings.warn(
+            f"ZeRO-1 owner sharding is imbalanced: the largest rank "
+            f"shard is {cap} elements vs the ideal {ideal} (n/p).  "
+            f"Per-rank state is cap-padded, so the param gather (and "
+            f"the reduce_to_owner_broadcast reduce-scatter) moves "
+            f"p·cap elements, not n — lower bucket_mb so buckets pack "
+            f"evenly across ranks.", stacklevel=2)
+    # bucket -> gathered-space pieces (merge adjacent same-owner subs)
+    pieces: list[list[list[int]]] = [[] for _ in range(layout.n_buckets)]
+    for i, (b, s) in enumerate(subs):
+        if not s:
+            continue
+        r = sub_owner[i]
+        g_off = r * cap + sub_off[i] - starts[r]
+        ps = pieces[b]
+        if ps and ps[-1][0] + ps[-1][1] == g_off:
+            ps[-1][1] += s
+        else:
+            ps.append([g_off, s])
+    # zero-size buckets still need one (empty) piece at their offset
+    for b in range(layout.n_buckets):
+        if not pieces[b]:
+            r = owners[b]
+            pieces[b].append([r * cap + bucket_offsets[b] - starts[r], 0])
+    return OwnerPlan(n_ranks, tuple(owners), tuple(starts), tuple(lengths),
+                     tuple(bucket_offsets),
+                     tuple(tuple((int(o), int(ln)) for o, ln in ps)
+                           for ps in pieces))

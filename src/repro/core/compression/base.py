@@ -13,13 +13,19 @@ Table 2 / §4) so each phase can be timed and costed separately:
         (stochastic rounding seeds); ``None`` means "rank 0 / single
         device".
 
-    reduce(payload, axes) -> Payload        [``reduce_payload`` — the shared
+    reduce(payload, axes, plan) -> Payload  [``reduce_payload`` — the shared
         helper ``GradAggregator.reduce`` delegates to]
-        The only phase that touches the network.  Associative payloads are
-        all-reduced (``pmean`` — wire cost constant in p, paper Table 3);
-        non-associative payloads are all-gathered (cost linear in p, the
-        paper's Fig. 7 scaling failure).  The choice is read off
-        ``payload.associative`` — compressors never pick collectives.
+        The only phase that touches the network.  WHICH collective moves
+        the payload is a declarative :class:`repro.parallel.commplan
+        .CommPlan` (docs/comm_api.md); the payload's ``associative`` flag
+        is a *validation* constraint on plan choice, not the dispatcher —
+        mean-reducing plans (allreduce / reduce_scatter_allgather /
+        hierarchical / reduce_to_owner_broadcast) require an associative
+        payload, ``gather_all`` accepts anything.  The default plan
+        (``auto``) reproduces the historic dispatch: associative payloads
+        all-reduce (``pmean`` — wire cost constant in p, paper Table 3);
+        the rest all-gather (cost linear in p, the paper's Fig. 7 scaling
+        failure).  Compressors never pick collectives.
 
     decode(payload, bucket, state) -> (mean_bucket, new_state)
         Purely local, collective-free: reconstruct the mean gradient from
@@ -52,6 +58,8 @@ from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro.parallel import commplan as cp
 
 
 AxisNames = Sequence[str]
@@ -110,25 +118,44 @@ class Payload:
                                        * jnp.dtype(t.dtype).itemsize))
         return out
 
+    def reduce(self, axes: AxisNames,
+               plan: Optional[cp.CommPlan] = None) -> "Payload":
+        """Move this payload across the mesh under ``plan`` (default: the
+        ``auto`` plan — the historic associativity dispatch).  Sugar for
+        :func:`reduce_payload`."""
+        return reduce_payload(self, axes, plan)
 
-def reduce_payload(payload: Payload, axes: AxisNames) -> Payload:
+
+def reduce_payload(payload: Payload, axes: AxisNames,
+                   plan: Optional[cp.CommPlan] = None) -> Payload:
     """The reduce phase: THE single place a compression payload meets a
-    collective.  Picks the collective from ``payload.associative``:
+    collective.  The schedule is a declarative :class:`CommPlan`
+    (docs/comm_api.md); ``payload.associative`` VALIDATES the plan choice
+    rather than dispatching it.  ``plan=None`` (the ``auto`` plan) keeps
+    the historic behaviour:
 
-      * associative     -> ``pmean`` each tensor (all-reduce-style cost,
-                           constant in p);
-      * non-associative -> ``all_gather`` each tensor, normalized to a
-                           leading peer axis ``(p, *local_shape)``.
+      * associative     -> ``allreduce``: ``pmean`` each tensor
+                           (all-reduce-style cost, constant in p);
+      * non-associative -> ``gather_all``: ``all_gather`` each tensor,
+                           normalized to a leading peer axis
+                           ``(p, *local_shape)``.
+
+    An ASSOCIATIVE payload returns the same full-shape mean under every
+    plan — bit-identical for the ring decompositions, fp-close for
+    ``hierarchical`` and ``gather_all`` (which pays the gather wire cost
+    and averages the peer rows locally) — so ``decode`` contracts never
+    depend on the plan.  A NON-associative payload keeps the gathered
+    peer-axis shape (and only ``gather_all``/``auto`` is legal).  Illegal
+    combinations raise :class:`repro.parallel.commplan.CommPlanError`.
     """
     axes = tuple(axes)
+    plan = cp.CommPlan.parse(plan).resolve(payload.associative)
     if payload.associative:
-        tensors = jax.tree.map(lambda t: jax.lax.pmean(t, axes),
+        tensors = jax.tree.map(lambda t: cp.mean_reduce(t, axes, plan),
                                payload.tensors)
     else:
-        def gather(t):
-            g = jax.lax.all_gather(t, axes)
-            return g.reshape((-1,) + t.shape)
-        tensors = jax.tree.map(gather, payload.tensors)
+        tensors = jax.tree.map(lambda t: cp.gather_tensor(t, axes),
+                               payload.tensors)
     return dataclasses.replace(payload, tensors=tensors,
                                local=payload.tensors, reduced=True)
 
@@ -163,11 +190,14 @@ class Compressor:
 
     # ---- phase 2: the only phase that touches the network ---------------
     def encode_and_reduce(self, bucket: jax.Array, state: Any,
-                          axes: AxisNames) -> Payload:
+                          axes: AxisNames,
+                          plan: Optional["cp.CommPlan"] = None) -> Payload:
         """encode + reduce; multi-round schemes (PowerSGD) override this to
-        run several encode->reduce rounds before decode."""
+        run several encode->reduce rounds before decode.  ``plan`` selects
+        the collective schedule (default: the ``auto`` plan)."""
         rank = jax.lax.axis_index(tuple(axes))
-        return reduce_payload(self.encode(bucket, state, rank=rank), axes)
+        return reduce_payload(self.encode(bucket, state, rank=rank), axes,
+                              plan)
 
     # ---- phase 3: local, collective-free --------------------------------
     def decode(self, payload: Payload, bucket: jax.Array, state: Any):
@@ -175,8 +205,9 @@ class Compressor:
         raise NotImplementedError
 
     # ---- composition (what the train step calls) ------------------------
-    def aggregate(self, bucket: jax.Array, state: Any, axes: AxisNames):
-        payload = self.encode_and_reduce(bucket, state, axes)
+    def aggregate(self, bucket: jax.Array, state: Any, axes: AxisNames,
+                  plan: Optional["cp.CommPlan"] = None):
+        payload = self.encode_and_reduce(bucket, state, axes, plan)
         return self.decode(payload, bucket, state)
 
     # ---- wire accounting: DERIVED from the payloads, never hand-written --

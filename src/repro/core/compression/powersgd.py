@@ -95,14 +95,14 @@ class PowerSGD(Compressor):
 
     # ---- phase 2: two reduce rounds with Gram-Schmidt in between --------
     def encode_and_reduce(self, bucket: jax.Array, state: PowerSGDState,
-                          axes: AxisNames) -> Payload:
+                          axes: AxisNames, plan=None) -> Payload:
         from repro.kernels import ops as kops
-        red1 = reduce_payload(self.encode(bucket, state), axes)
+        red1 = reduce_payload(self.encode(bucket, state), axes, plan)
         p_hat = orthonormalize(red1.tensors["p"])
         m, _ = self._matrix(bucket, state)
         red2 = reduce_payload(
             Payload({"q": kops.powersgd_encode(m.T, p_hat)},
-                    associative=True), axes)
+                    associative=True), axes, plan)
         return dataclasses.replace(
             red2, tensors={"p": p_hat, "q": red2.tensors["q"]})
 

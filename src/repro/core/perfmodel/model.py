@@ -113,18 +113,133 @@ def compressed_time(w: Workload, p: int, hw: Hardware,
 
 
 def zero1_gather_time(w: Workload, p: int, hw: Hardware,
-                      param_bytes_frac: float = 0.5) -> float:
+                      param_bytes_frac: float = 0.5,
+                      comm: str = "auto") -> float:
     """The comm ZeRO-1 adds on top of any gradient-exchange scheme: after
-    the sharded update, each rank all-gathers its owned parameter shard
-    (~model/p elements, working-dtype — bf16 working params at half the
-    fp32 gradient bytes by default).  Mirrors
+    the sharded update, each rank's owned parameter shard (~model/p
+    elements, working-dtype — bf16 working params at half the fp32
+    gradient bytes by default) reaches every peer.  Mirrors
     ``train_step.zero1_apply``'s Payload gather; applies equally to the
     syncSGD baseline and to every compression leg, so it shifts absolute
-    times, not just the baseline."""
+    times, not just the baseline.
+
+    Under the ``reduce_to_owner_broadcast`` comm plan the exchange is the
+    owner's ring *broadcast* — same bytes, but deterministic
+    one-sender-per-shard traffic, so it skips the all-gather incast
+    congestion factor (paper App. C) the default gather pays."""
     if p <= 1:
         return 0.0
-    return costs.all_gather(w.model_bytes * param_bytes_frac / p, p,
-                            hw.net_bw, hw.alpha)
+    n = w.model_bytes * param_bytes_frac / p
+    if comm == "reduce_to_owner_broadcast":
+        return costs.broadcast(n * p, p, hw.net_bw, hw.alpha)
+    return costs.all_gather(n, p, hw.net_bw, hw.alpha,
+                            hw.allgather_congestion)
+
+
+def _plan_kw(hw: Hardware, p: int, pods: int = 2) -> dict:
+    """Shared plan_collective keyword bridge: the hierarchical split puts
+    ``pods`` groups on the slow (DCN) tier when the hardware has one."""
+    return dict(congestion=hw.allgather_congestion,
+                p_intra=max(1, p // pods) if hw.dcn_bw else p,
+                dcn_bw=hw.dcn_bw)
+
+
+def sync_sgd_plan_time(w: Workload, p: int, hw: Hardware,
+                       comm: str = "auto",
+                       bucket_bytes: float = BUCKET_BYTES_DEFAULT,
+                       gamma: float = GAMMA_DEFAULT) -> float:
+    """Optimized syncSGD under an explicit comm plan: the same
+    overlap-and-bucket structure as :func:`sync_sgd_time`, but every
+    bucket collective priced by ``costs.plan_collective`` — the knob that
+    lets the matrix ask "does compression still lose when syncSGD pays
+    gather-based costs?" (``comm="gather_all"``).  ``auto``/``allreduce``
+    reproduce :func:`sync_sgd_time` exactly.  A ``gather_all`` or
+    ``reduce_to_owner_broadcast`` baseline cannot pipeline its buckets
+    (commplan.OVERLAPPABLE — the runtime degrades to the serial
+    schedule), so those plans pay compute + full comm serially."""
+    from repro.parallel import commplan as cp
+    plan = cp.CommPlan.parse(comm).resolve(True)
+    if plan.kind == "allreduce":
+        return sync_sgd_time(w, p, hw, bucket_bytes, gamma)
+    if p <= 1:
+        return w.t_comp
+    kw = _plan_kw(hw, p)
+    k = max(1, math.ceil(w.model_bytes / bucket_bytes))
+    b = bucket_bytes if k > 1 else w.model_bytes
+    b_hat = w.model_bytes - (k - 1) * bucket_bytes if k > 1 \
+        else w.model_bytes
+    t_b = costs.plan_collective(plan, True, b, p, hw.net_bw, hw.alpha,
+                                **kw)
+    t_tail = costs.plan_collective(plan, True, b_hat, p, hw.net_bw,
+                                   hw.alpha, **kw)
+    if plan.kind in cp.OVERLAPPABLE:
+        return max(gamma * w.t_comp, (k - 1) * t_b) + t_tail
+    return w.t_comp + (k - 1) * t_b + t_tail
+
+
+def sync_sgd_serial_plan_time(w: Workload, p: int, hw: Hardware,
+                              comm: str = "auto") -> float:
+    """The Fig-2 serial strawman under an explicit comm plan: full
+    backward, then ONE whole-model collective of the plan's shape.
+    ``auto``/``allreduce`` reproduce :func:`sync_sgd_serial_time`."""
+    from repro.parallel import commplan as cp
+    plan = cp.CommPlan.parse(comm).resolve(True)
+    if plan.kind == "allreduce":
+        return sync_sgd_serial_time(w, p, hw)
+    if p <= 1:
+        return w.t_comp
+    return w.t_comp + costs.plan_collective(
+        plan, True, w.model_bytes, p, hw.net_bw, hw.alpha,
+        **_plan_kw(hw, p))
+
+
+def compressed_plan_time(w: Workload, p: int, hw: Hardware,
+                         spec: CompressionSpec,
+                         comm: str = "auto") -> float:
+    """Gradient-compression time under an explicit comm plan: each
+    payload round pays ``costs.plan_collective`` (which enforces the
+    legality matrix — a non-associative payload under a mean-reducing
+    plan raises ``CommPlanError``, exactly like the runtime).
+    ``auto`` reproduces :func:`compressed_time` exactly."""
+    from repro.parallel import commplan as cp
+    plan = cp.CommPlan.parse(comm)
+    if plan.kind == "auto":
+        return compressed_time(w, p, hw, spec)
+    if p <= 1:
+        return w.t_comp
+    kw = _plan_kw(hw, p)
+    comm_t = sum(
+        costs.plan_collective(plan, spec.associative, payload, p,
+                              hw.net_bw, hw.alpha, **kw)
+        for payload in spec.payload_bytes)
+    return w.t_comp + spec.t_encode_decode + comm_t
+
+
+def grad_exchange_bytes(w: Workload, p: int, hw: Hardware,
+                        comm: str = "auto") -> float:
+    """Per-device effective wire bytes of one gradient exchange under a
+    comm plan (``CommPlan.wire_bytes`` — the same object the runtime
+    executes), at the hardware's congestion factor.  The currency of the
+    bench comm anchors."""
+    from repro.parallel import commplan as cp
+    plan = cp.CommPlan.parse(comm).resolve(True)
+    return plan.wire_bytes(w.model_bytes, p, hw.allgather_congestion,
+                           p_intra=_plan_kw(hw, p)["p_intra"])
+
+
+def zero1_exchange_bytes(w: Workload, p: int, hw: Hardware,
+                         param_bytes_frac: float = 0.5,
+                         comm: str = "auto") -> float:
+    """Per-device param-leg bytes of the ZeRO-1 post-update exchange:
+    the all-gather pays the incast congestion factor; the
+    ``reduce_to_owner_broadcast`` broadcast leg is congestion-free ring
+    traffic (same formula :func:`zero1_gather_time` prices)."""
+    if p <= 1:
+        return 0.0
+    n = w.model_bytes * param_bytes_frac
+    if comm == "reduce_to_owner_broadcast":
+        return n * (p - 1) / p
+    return hw.allgather_congestion * n * (p - 1) / p
 
 
 def accum_scaled(w: Workload, accum: int) -> Workload:

@@ -152,12 +152,23 @@ class AnalyticBackend:
             w = pm.accum_scaled(self._workload(spec), spec.accum)
             hw = self._hardware(spec)
             p = spec.workers
-            # ZeRO-1's post-update param gather lands on EVERY leg
+            if spec.comm == "reduce_to_owner_broadcast" and not (
+                    spec.zero1 and spec.is_baseline):
+                # same constraint the runtime enforces: the broadcast leg
+                # carries the owner's updated params
+                raise ValueError(
+                    "comm='reduce_to_owner_broadcast' needs zero1=True "
+                    "and an uncompressed baseline method")
+            # ZeRO-1's post-update param exchange lands on EVERY leg
             # (baseline and compressed alike — the update is sharded no
-            # matter how the gradients arrived).
-            t_z1 = pm.zero1_gather_time(w, p, hw) if spec.zero1 else 0.0
-            t_overlapped = pm.sync_sgd_time(w, p, hw) + t_z1
-            t_serial = pm.sync_sgd_serial_time(w, p, hw) + t_z1
+            # matter how the gradients arrived).  Under rtob it is the
+            # congestion-free broadcast leg.
+            t_z1 = pm.zero1_gather_time(w, p, hw, comm=spec.comm) \
+                if spec.zero1 else 0.0
+            t_overlapped = pm.sync_sgd_plan_time(w, p, hw, spec.comm) \
+                + t_z1
+            t_serial = pm.sync_sgd_serial_plan_time(w, p, hw, spec.comm) \
+                + t_z1
             # the overlap knob picks the baseline the cell competes
             # against: None/True = the paper's optimized overlapped
             # syncSGD (historic behaviour), False = the Fig-2 serial
@@ -170,11 +181,20 @@ class AnalyticBackend:
                      overlap_saving=1.0 - t_overlapped / t_serial,
                      gap_s=t_sync - pm.linear_scaling_time(w),
                      required_ratio=pm.required_compression(w, p, hw))
+            if spec.comm != "auto":
+                # per-plan wire accounting, derived from the same
+                # CommPlan the runtime executes (docs/comm_api.md)
+                m["comm"] = spec.comm
+                m["grad_exchange_bytes"] = pm.grad_exchange_bytes(
+                    w, p, hw, spec.comm)
             if spec.zero1:
                 m["t_zero1_gather_s"] = t_z1
+                m["param_exchange_bytes"] = pm.zero1_exchange_bytes(
+                    w, p, hw, comm=spec.comm)
             if not spec.is_baseline:
                 cspec = self._compression(spec, w, hw)
-                t = pm.compressed_time(w, p, hw, cspec) + t_z1
+                t = pm.compressed_plan_time(w, p, hw, cspec, spec.comm) \
+                    + t_z1
                 m.update(
                     t_method_s=t,
                     speedup=t_sync / t,
@@ -302,6 +322,8 @@ class MeasuredBackend:
             plan_args += ["--zero1"]
         if spec.accum > 1:
             plan_args += ["--accum", str(spec.accum)]
+        if spec.comm != "auto":
+            plan_args += ["--comm", spec.comm]
         for k, v in spec.overrides:
             # free-form ParallelPlan overrides, same as dryrun cells
             # (e.g. bucket_mb=0.25 so a smoke-scale zero1 cell still has

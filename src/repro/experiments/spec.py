@@ -77,6 +77,17 @@ class ExperimentSpec:
                     multiplies the compute leg, amortizing the unchanged
                     per-step comm; train: per-microbatch segmented
                     backward with flush-on-final-microbatch).  Rev 3.
+      ``comm``      the collective schedule (a ``CommPlan`` kind string,
+                    docs/comm_api.md): "auto" (resolve from payload
+                    associativity — the historic dispatch) | "allreduce" |
+                    "reduce_scatter_allgather" |
+                    "reduce_to_owner_broadcast" | "gather_all" |
+                    "hierarchical[:intra+axes]".  Analytic: baseline and
+                    method legs priced per plan
+                    (``pm.sync_sgd_plan_time`` /
+                    ``pm.compressed_plan_time``, legality enforced);
+                    train: ``ParallelPlan.comm`` override on the measured
+                    step.  Wire-format rev 4.
 
     Inline overrides (None/0 = resolve from the calibration registry):
       workload: ``model_bytes``, ``t_comp_s``;
@@ -99,6 +110,7 @@ class ExperimentSpec:
     overlap: Optional[bool] = None
     zero1: bool = False
     accum: int = 1
+    comm: str = "auto"
     # -- inline workload parameters (0.0 = resolve by name) --
     model_bytes: float = 0.0
     t_comp_s: float = 0.0
@@ -233,14 +245,25 @@ class Grid:
                      workloads: Sequence[str] = PAPER_WORKLOADS,
                      methods: Sequence[str] = PAPER_METHODS,
                      workers: Sequence[int] = PAPER_WORKER_COUNTS,
-                     batch: int = 64) -> "Grid":
+                     batch: int = 64,
+                     comm: Sequence[str] = ("auto",)) -> "Grid":
         """The paper's ≥200-setup matrix (abstract: "more than 200
         different setups ... only in 6 cases" does compression win): every
         studied model × every Table-2 scheme × the data-center worker-count
         axis, at the typical batch size and the 10 Gb/s paper cluster.
         3 × 6 × 12 = 216 setups, each compared against optimized syncSGD.
+
+        ``comm`` expands the matrix across collective schedules
+        (docs/comm_api.md) — the scenario axis the paper only models
+        analytically: e.g. ``comm=("auto", "gather_all")`` scores every
+        cell against BOTH the ring baseline and a syncSGD that pays
+        gather-based costs.  The default keeps the historic 216-cell
+        matrix (and its hashes) unchanged.
         """
         base = ExperimentSpec(workload=workloads[0], hardware="paper",
                               batch=batch)
-        return cls.over(base, workload=list(workloads),
-                        method=list(methods), workers=list(workers))
+        axes: dict = dict(workload=list(workloads), method=list(methods),
+                          workers=list(workers))
+        if tuple(comm) != ("auto",):
+            axes["comm"] = list(comm)
+        return cls.over(base, **axes)

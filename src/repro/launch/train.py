@@ -26,6 +26,12 @@ def main(argv=None):
     ap.add_argument("--compression", default=None,
                     help="none|powersgd|signsgd|mstopk|randomk|qsgd|terngrad")
     ap.add_argument("--compress-axes", default=None, choices=["pod", "all"])
+    ap.add_argument("--comm", default=None,
+                    help="collective schedule (CommPlan kind, "
+                         "docs/comm_api.md): auto|allreduce|"
+                         "reduce_scatter_allgather|"
+                         "reduce_to_owner_broadcast|gather_all|"
+                         "hierarchical[:intra+axes]")
     ap.add_argument("--overlap", action="store_true",
                     help="DDP: fuse reverse-order bucketed aggregation "
                          "into the backward pass (repro.train.overlap)")
@@ -75,6 +81,8 @@ def main(argv=None):
         overrides["compression"] = args.compression
     if args.compress_axes:
         overrides["compress_axes"] = args.compress_axes
+    if args.comm:
+        overrides["comm"] = args.comm
     if args.overlap:
         # overlap is DDP-only (ZeRO-1 and accum>1 compose with it); say so
         # when we flip the arch's own plan instead of silently
@@ -93,7 +101,7 @@ def main(argv=None):
           f"dp_mode={setup.arch.plan.dp_mode} zero1={setup.zero1} "
           f"fsdp={setup.fsdp_axes} accum={args.accum} "
           f"agg={setup.agg_cfg.compressor}@{setup.agg_cfg.compress_axes}"
-          f"{sched}")
+          f" comm={setup.comm.spec_str()}{sched}")
 
     data = Pipeline(DataConfig(vocab=arch.vocab, seq_len=args.seq,
                                global_batch=args.batch, seed=args.seed))

@@ -1,0 +1,303 @@
+"""CommPlan: the collective schedule as a first-class, declarative axis.
+
+The paper's performance model hinges on *which* collective moves the
+bytes — ring all-reduce cost is constant in p while gather-based schemes
+scale linearly with p (Table 3) — but until this module the runtime
+hardwired that choice inside ``reduce_payload`` (associative -> ``pmean``,
+else ``all_gather``).  A :class:`CommPlan` lifts the schedule into data:
+
+================================  ==========================================
+kind                              wire pattern (per aggregation round)
+================================  ==========================================
+``allreduce``                     one ring all-reduce (``pmean``); moves
+                                  ``2·n·(p-1)/p`` bytes per device.
+``reduce_scatter_allgather``      the two-shot ring decomposition:
+                                  ``psum_scatter`` then tiled ``all_gather``
+                                  — same bytes as ``allreduce``, but the
+                                  reduced shard exists as a first-class
+                                  intermediate (the natural host for
+                                  ZeRO-1's sharded update).
+``reduce_to_owner_broadcast``     reduce each bucket to its owner rank
+                                  (``n·(p-1)/p`` — one ring reduce-scatter
+                                  over the owner-aligned layout), then
+                                  broadcast the *owner's product* instead
+                                  of the gradient.  Under uncompressed
+                                  ZeRO-1 the product is the updated
+                                  parameter shard, so the gradient
+                                  broadcast leg disappears entirely —
+                                  halving the exchanged bytes vs
+                                  all-reduce + param-gather.  Without a
+                                  sharded consumer it degenerates to the
+                                  two-shot ring (the reduced bucket itself
+                                  is broadcast), which is why
+                                  ``ParallelPlan.comm`` only accepts it
+                                  with ``zero1`` + ``compression="none"``.
+``gather_all``                    every worker receives every worker's
+                                  payload (``all_gather``, ``c·n·(p-1)``
+                                  bytes with the incast congestion factor
+                                  ``c`` — paper App. C).  The ONLY legal
+                                  plan for non-associative payloads; legal
+                                  (but wasteful) for associative ones,
+                                  which lets the experiment matrix ask
+                                  "does compression still lose when
+                                  syncSGD pays gather-based costs?".
+``hierarchical``                  mean over the ``intra`` axes first
+                                  (intra-pod ICI), then mean across the
+                                  remaining axes (inter-pod DCN) — mean of
+                                  means over equal-size groups is the
+                                  global mean, but the reduction order
+                                  differs, so equivalence to ``allreduce``
+                                  is fp-tolerance, not bitwise.
+``auto``                          the historic dispatch: resolve to
+                                  ``allreduce`` for associative payloads,
+                                  ``gather_all`` otherwise.
+================================  ==========================================
+
+Associativity is now a *validation* constraint on plan choice, not the
+dispatcher: a non-associative payload with any plan but
+``gather_all``/``auto`` raises :class:`CommPlanError` (there is no mean to
+ring-reduce), and the same legality matrix gates the analytic model
+(``perfmodel.costs.plan_collective``) so predicted bytes/time stay derived
+from the same object the runtime executes.
+
+Plans are frozen, hashable, and JSON-round-trippable (``to_json`` /
+``from_json`` / ``parse``) so they ride ``ExperimentSpec`` (wire rev 4),
+``ParallelPlan.comm``, and ``BENCH_*.json`` rows unchanged.
+
+Bit-identity contract (proven by ``tests/dist/dist_commplan_equivalence``):
+``allreduce``, ``reduce_scatter_allgather``, and the owner-aligned
+reduce-to-owner path sum in the same rank order, so their aggregated
+gradients are BIT-IDENTICAL on a mesh; ``hierarchical`` and associative
+``gather_all`` reorder the summation and agree to fp tolerance.
+
+See docs/comm_api.md for the taxonomy, legality matrix, and byte formulas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+#: every concrete schedule (``auto`` is the resolve-from-payload sentinel).
+KINDS = ("allreduce", "reduce_scatter_allgather",
+         "reduce_to_owner_broadcast", "gather_all", "hierarchical")
+
+#: kinds that mean-reduce and therefore require an associative payload.
+ASSOCIATIVE_ONLY = ("allreduce", "reduce_scatter_allgather",
+                    "reduce_to_owner_broadcast", "hierarchical")
+
+#: kinds whose per-bucket collective can pipeline into the backward pass
+#: (ring traffic with a complete result per bucket — paper Table 3);
+#: ``gather_all`` needs every peer before any decode and
+#: ``reduce_to_owner_broadcast`` folds its exchange into the sharded
+#: update, so neither overlaps.
+OVERLAPPABLE = ("allreduce", "reduce_scatter_allgather", "hierarchical")
+
+
+class CommPlanError(ValueError):
+    """An illegal (plan, payload) combination — e.g. ring-reducing a
+    non-associative payload."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """A frozen, JSON-round-trippable description of how a payload is
+    aggregated across mesh axes.
+
+    ``kind``   one of :data:`KINDS`, or ``"auto"`` (resolve from the
+               payload's associativity — the historic dispatch).
+    ``intra``  ``hierarchical`` only: the axes mean-reduced in the first
+               (intra-pod) stage; the remaining reduction axes form the
+               second (inter-pod) stage.  Axes named here but absent from
+               a particular reduction are ignored, so one plan serves
+               meshes with and without a pod axis.
+    """
+    kind: str = "auto"
+    intra: tuple[str, ...] = ("data",)
+
+    def __post_init__(self):
+        if self.kind not in KINDS + ("auto",):
+            raise CommPlanError(
+                f"unknown comm plan kind {self.kind!r}; have "
+                f"{KINDS + ('auto',)}")
+        object.__setattr__(self, "intra", tuple(self.intra))
+
+    # ---- legality: associativity constrains plan choice -----------------
+    def legal_for(self, associative: bool) -> bool:
+        if self.kind == "auto" or self.kind == "gather_all":
+            return True
+        return associative
+
+    def validate(self, associative: bool) -> None:
+        if not self.legal_for(associative):
+            raise CommPlanError(
+                f"comm plan {self.kind!r} mean-reduces its payload, but "
+                f"the payload is non-associative (paper Table 3): only "
+                f"'gather_all' (or 'auto') can move it")
+
+    def resolve(self, associative: bool) -> "CommPlan":
+        """Concrete plan for a payload: ``auto`` resolves to the historic
+        dispatch; everything else validates and returns itself."""
+        if self.kind == "auto":
+            return dataclasses.replace(
+                self, kind="allreduce" if associative else "gather_all")
+        self.validate(associative)
+        return self
+
+    @property
+    def gathers(self) -> bool:
+        """Does the reduced payload carry a leading peer axis of size p
+        (the ``gather_all`` wire shape)?"""
+        return self.kind == "gather_all"
+
+    # ---- JSON round trip ------------------------------------------------
+    def to_json(self) -> dict:
+        return dict(kind=self.kind, intra=list(self.intra))
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CommPlan":
+        return cls(kind=d.get("kind", "auto"),
+                   intra=tuple(d.get("intra", ("data",))))
+
+    @classmethod
+    def parse(cls, s: "str | CommPlan | None") -> "CommPlan":
+        """``"hierarchical"`` or ``"hierarchical:pod+data"`` (intra axes
+        ``+``-joined after the colon) -> CommPlan.  None -> auto.  An
+        ``:intra`` suffix on any other kind is rejected (it would be
+        silently ignored — and two spellings of one plan must not hash
+        to two experiment cells)."""
+        if s is None:
+            return cls("auto")
+        if isinstance(s, CommPlan):
+            return s
+        kind, _, intra = str(s).partition(":")
+        if intra:
+            if kind != "hierarchical":
+                raise CommPlanError(
+                    f"comm plan {s!r}: only 'hierarchical' takes an "
+                    f":intra+axes suffix")
+            return cls(kind=kind, intra=tuple(intra.split("+")))
+        return cls(kind=kind)
+
+    def spec_str(self) -> str:
+        """Inverse of :meth:`parse` (the ``ExperimentSpec.comm`` form)."""
+        if self.kind == "hierarchical" and self.intra != ("data",):
+            return f"{self.kind}:{'+'.join(self.intra)}"
+        return self.kind
+
+    # ---- analytic wire accounting (the byte formulas the perf model and
+    # ---- the bench anchors read; time lives in perfmodel.costs) ---------
+    def wire_bytes(self, n: float, p: int, congestion: float = 1.0,
+                   p_intra: int = 1) -> float:
+        """Effective bytes exchanged per device to aggregate an ``n``-byte
+        payload over ``p`` workers — the β-term bytes of the matching
+        ``perfmodel.costs`` collective (congestion inflates the gather's
+        effective bytes; ring traffic is congestion-free).
+
+        ``hierarchical`` splits p into ``p_intra`` × ``p / p_intra``.
+        """
+        if p <= 1:
+            return 0.0
+        kind = self.kind
+        if kind == "auto" or kind == "allreduce" \
+                or kind == "reduce_scatter_allgather":
+            return 2.0 * n * (p - 1) / p
+        if kind == "reduce_to_owner_broadcast":
+            # the gradient leg only (one ring reduce-scatter to owners);
+            # the broadcast leg moves the owner's PRODUCT (under ZeRO-1:
+            # the updated params — costed by zero1's param term, not here)
+            return n * (p - 1) / p
+        if kind == "gather_all":
+            return congestion * n * (p - 1)
+        if kind == "hierarchical":
+            p_i = max(1, min(p_intra, p))
+            p_o = p // p_i
+            return (2.0 * n * (p_i - 1) / p_i
+                    + 2.0 * n * (p_o - 1) / p_o)
+        raise CommPlanError(kind)
+
+
+# --------------------------------------------------------------------------
+# executable reductions (called inside shard_map)
+# --------------------------------------------------------------------------
+def axes_p(axes: Sequence[str]) -> int:
+    """Static total size of the named reduction axes (``psum`` of a
+    literal constant-folds to a Python int inside shard_map)."""
+    return int(jax.lax.psum(1, tuple(axes)))
+
+
+def _rs_ag_mean(t: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Two-shot ring mean: pad-to-p, ``psum_scatter`` (each rank holds the
+    summed 1/p tile), tiled ``all_gather``, unpad, divide.  Sums in the
+    same rank order as ``pmean`` -> bit-identical to ``allreduce`` (the
+    dist oracle asserts it)."""
+    p = axes_p(axes)
+    flat = t.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % p
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    shard = jax.lax.psum_scatter(flat, axes, scatter_dimension=0,
+                                 tiled=True)
+    full = jax.lax.all_gather(shard, axes, axis=0, tiled=True)
+    return (full[:n] / jax.lax.psum(1, axes)).reshape(t.shape) \
+        .astype(t.dtype)
+
+
+def _hier_mean(t: jax.Array, axes: tuple[str, ...],
+               intra: tuple[str, ...]) -> jax.Array:
+    """Mean over the intra axes (ICI) then over the rest (DCN).  Equal
+    group sizes make the mean-of-means the global mean; degenerate splits
+    (all axes intra, or none) collapse to a single pmean."""
+    inner = tuple(a for a in axes if a in intra)
+    outer = tuple(a for a in axes if a not in intra)
+    if inner:
+        t = jax.lax.pmean(t, inner)
+    if outer:
+        t = jax.lax.pmean(t, outer)
+    return t
+
+
+def mean_reduce(t: jax.Array, axes: Sequence[str], plan: CommPlan,
+                ) -> jax.Array:
+    """The mean of ``t`` over ``axes``, moved by ``plan``'s collective —
+    the single-tensor form ``reduce_payload`` and the raw (``none``)
+    aggregation path share.  Every kind returns the full mean on every
+    rank (``gather_all`` gathers then averages the peer rows — same value,
+    different summation order)."""
+    axes = tuple(axes)
+    if not axes:
+        return t
+    kind = plan.resolve(associative=True).kind
+    if kind == "allreduce":
+        return jax.lax.pmean(t, axes)
+    if kind in ("reduce_scatter_allgather", "reduce_to_owner_broadcast"):
+        # without a sharded consumer, reduce-to-owner + broadcast of the
+        # reduced bucket IS the two-shot ring (documented degeneracy)
+        return _rs_ag_mean(t, axes)
+    if kind == "hierarchical":
+        return _hier_mean(t, axes, plan.intra)
+    if kind == "gather_all":
+        g = jax.lax.all_gather(t, axes)
+        g = g.reshape((-1,) + t.shape)
+        return (jnp.sum(g, axis=0) / jax.lax.psum(1, axes)).astype(t.dtype)
+    raise CommPlanError(kind)
+
+
+def gather_tensor(t: jax.Array, axes: Sequence[str]) -> jax.Array:
+    """``all_gather`` normalized to a leading peer axis ``(p, *shape)`` —
+    the non-associative wire shape (and ZeRO-1's param broadcast leg)."""
+    g = jax.lax.all_gather(t, tuple(axes))
+    return g.reshape((-1,) + t.shape)
+
+
+def owner_reduce_scatter(flat_tiles: jax.Array, axes: Sequence[str],
+                         ) -> jax.Array:
+    """Reduce-to-owner over an owner-aligned ``(p·cap,)`` layout: tile
+    ``r`` holds the elements rank ``r`` owns, so the ring reduce-scatter
+    delivers each owner the SUM of its shard — ``n·(p-1)/p`` bytes, half
+    an all-reduce.  The ``reduce_to_owner_broadcast`` gradient leg."""
+    return jax.lax.psum_scatter(flat_tiles, tuple(axes),
+                                scatter_dimension=0, tiled=True)

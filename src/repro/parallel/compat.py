@@ -31,3 +31,28 @@ def make_mesh(shape, axes):
             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
     except (AttributeError, TypeError):  # older jax without axis_types
         return jax.make_mesh(shape, axes)
+
+
+@jax.custom_vjp
+def ad_optimization_barrier(args):
+    """``jax.lax.optimization_barrier`` that is safe under differentiation.
+
+    The pinned jax (0.4.37) has no AD rule for ``optimization_barrier``,
+    so barriers inside a differentiated forward (``model._remat`` pins
+    per-layer slices of the saved activation stack against whole-stack
+    fp32 hoisting) raise ``NotImplementedError`` at trace time.  The
+    barrier's job is entirely in the primal program — keep it there (the
+    checkpointed forward replay still emits it) and pass cotangents
+    through unchanged."""
+    return jax.lax.optimization_barrier(args)
+
+
+def _ad_ob_fwd(args):
+    return ad_optimization_barrier(args), None
+
+
+def _ad_ob_bwd(_, cts):
+    return (cts,)
+
+
+ad_optimization_barrier.defvjp(_ad_ob_fwd, _ad_ob_bwd)

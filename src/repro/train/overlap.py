@@ -31,13 +31,18 @@ closes that model-vs-execution gap:
      what makes serial-vs-overlapped step time a pure exposed-comm
      measurement.
 
-Non-associative schemes (signsgd/qsgd/terngrad/mstopk) cannot ride the
-overlapped all-reduce pipeline — their all-gather payload needs every
-peer's tensors before *any* decode can complete, and their wire cost grows
-with p, so pipelining buckets buys nothing (paper Table 3 / Takeaway 1).
-``make_step(schedule="overlap")`` therefore degrades them to the serial
-schedule; ``effective_schedule(setup)`` reports the degradation — the
-paper's claim, made executable.
+Which buckets may pipeline is decided by the resolved **comm plan**
+(``repro.parallel.commplan`` / docs/comm_api.md): ring plans (allreduce,
+reduce_scatter_allgather, hierarchical) overlap; ``gather_all`` — the
+forced resolution for non-associative schemes
+(signsgd/qsgd/terngrad/mstopk) — needs every peer's tensors before *any*
+decode can complete and its wire cost grows with p, so pipelining
+buckets buys nothing (paper Table 3 / Takeaway 1); and
+``reduce_to_owner_broadcast`` folds the whole exchange into the sharded
+update (no per-bucket collective at all — the backward runs "raw").
+``make_step(schedule="overlap")`` therefore degrades those plans to the
+serial schedule; ``effective_schedule(setup)`` reports the degradation —
+the paper's claim, made executable.
 
 Supported workload matrix (see docs/overlap.md for the decision table):
 
@@ -141,15 +146,28 @@ def check_supported(arch, plan) -> None:
 
 
 def effective_schedule(setup) -> str:
-    """The schedule ``make_step(schedule="overlap")`` actually runs:
-    ``"serial"`` when the compressor's payload is non-associative (the
-    all-gather round cannot pipeline — paper Table 3), else
-    ``"overlap"``."""
-    if setup.agg_cfg.compressor == "none":
-        return "overlap"
+    """The schedule ``make_step(schedule="overlap")`` actually runs,
+    resolved from the comm plan (docs/comm_api.md): only ring plans whose
+    per-bucket collective returns a complete result
+    (``commplan.OVERLAPPABLE``: allreduce / reduce_scatter_allgather /
+    hierarchical) can pipeline into the backward.  ``gather_all`` — the
+    forced resolution for non-associative payloads (paper Table 3) —
+    needs every peer before any decode, so it degrades to ``"serial"``
+    (every bucket's gather issued after the full backward); the
+    integrated ``reduce_to_owner_broadcast`` path has NO per-bucket
+    collective at all (the exchange is folded into the sharded update),
+    which reports as ``"raw"``."""
+    from repro.parallel import commplan as cp
+    if setup.rtob:
+        return "raw"
     if not setup.agg_cfg.compress_axes and not setup.agg_cfg.raw_axes:
         return "overlap"      # no collectives at all; schedule is moot
-    return "overlap" if setup.agg_cfg.build().associative else "serial"
+    if setup.agg_cfg.compressor == "none":
+        assoc = True
+    else:
+        assoc = setup.agg_cfg.build().associative
+    resolved = setup.agg_cfg.comm.resolve(assoc)
+    return "overlap" if resolved.kind in cp.OVERLAPPABLE else "serial"
 
 
 # --------------------------------------------------------------------------
@@ -633,6 +651,13 @@ def make_step(setup, schedule: str = "overlap", accum: int = 1,
     ov = build_layout(setup)
     if schedule == "overlap":
         schedule = effective_schedule(setup)
+    if setup.rtob:
+        # reduce_to_owner_broadcast: there is no per-bucket gradient
+        # collective to schedule — the update's owner-aligned ring
+        # reduce-scatter (zero1_apply) is the only gradient exchange, so
+        # the segmented backward runs "raw" under either requested
+        # schedule (serial == overlap trivially bit-identical).
+        schedule = "raw"
     update_fn = ts.make_update_fn(setup, ov.layout, ov)
 
     def backward(state, params, batch):
@@ -728,7 +753,11 @@ def make_unfused_step(setup, xent_chunk: int = 1024):
         grads = jax.tree.map(lambda g: g[0], grads_dev)
         loss_sum, ntok, aux = loss_dev[0], ntok_dev[0], aux_dev[0]
         aggregator = agg_mod.GradAggregator(setup.agg_cfg)
-        if setup.agg_cfg.compress_axes or setup.agg_cfg.raw_axes:
+        if setup.rtob:
+            # no bucket aggregation: the update's reduce-scatter is the
+            # only gradient collective
+            new_agg = state["agg"]
+        elif setup.agg_cfg.compress_axes or setup.agg_cfg.raw_axes:
             squeezed = tuple(jax.tree.map(lambda x: x[0], st)
                              for st in state["agg"])
             ordered = _ordered_leaves(ov, grads)

@@ -49,6 +49,12 @@ def main(argv=None) -> None:
     ap.add_argument("--accum", type=int, default=1,
                     help="gradient-accumulation microbatches per step "
                          "(the unfused strawman is skipped when > 1)")
+    ap.add_argument("--comm", default="auto",
+                    help="collective schedule (CommPlan kind, "
+                         "docs/comm_api.md): auto | allreduce | "
+                         "reduce_scatter_allgather | "
+                         "reduce_to_owner_broadcast (zero1+none only) | "
+                         "gather_all | hierarchical[:intra+axes]")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--bucket-mb", type=int, default=1,
@@ -88,7 +94,8 @@ def main(argv=None) -> None:
         plan_overrides[k] = coerce_kv(v)
     cfg = base.reduced(base.get(args.arch))
     plan_fields = dict(dp_mode="ddp", zero1=args.zero1, overlap=True,
-                       compression=args.method, bucket_mb=args.bucket_mb)
+                       compression=args.method, bucket_mb=args.bucket_mb,
+                       comm=args.comm)
     plan_fields.update(plan_overrides)      # explicit --plan wins
     cfg = dataclasses.replace(cfg, plan=dataclasses.replace(
         cfg.plan, **plan_fields))
@@ -130,7 +137,7 @@ def main(argv=None) -> None:
 
     rec = dict(
         arch=cfg.name, method=args.method, workers=args.devices,
-        zero1=args.zero1, accum=args.accum,
+        zero1=args.zero1, accum=args.accum, comm=args.comm,
         plan_overrides=plan_overrides or None,
         n_buckets=ov.layout.n_buckets,
         effective_schedule=overlap.effective_schedule(setup),

@@ -12,12 +12,19 @@ Two DP modes (DESIGN.md §4):
         ``accum > 1`` accumulates microbatches (overlap mode flushes each
         bucket once, on the final microbatch).  Optional ZeRO-1: the
         optimizer state is owner-sharded ALONG bucket boundaries
-        (``bucketing.owner_plan``: each bucket has one owner rank, a
-        rank's shard is one contiguous slice of the flat bucket space);
-        ``zero1_apply`` runs flat AdamW on the owned fp32 master and
-        all-gathers the updated working-dtype params through the Payload
-        reduce machinery.  One zero1 implementation serves the classic,
-        segmented, and unfused steps.
+        (``bucketing.owner_plan``: each bucket has one owner rank — or,
+        with fewer buckets than ranks, the largest buckets split so
+        every rank owns a contiguous sub-bucket; a rank's shard is one
+        contiguous slice of the flat bucket space); ``zero1_apply`` runs
+        flat AdamW on the owned fp32 master and all-gathers the updated
+        working-dtype params through the Payload reduce machinery.  One
+        zero1 implementation serves the classic, segmented, and unfused
+        steps.  WHICH collective moves each payload is the declarative
+        ``CommPlan`` (``plan.comm``, docs/comm_api.md); under
+        ``comm="reduce_to_owner_broadcast"`` (zero1 + uncompressed) the
+        gradient all-reduce disappears entirely — the update's
+        owner-aligned ring reduce-scatter plus the param broadcast are
+        the step's only exchanges, half the bytes.
   fsdp  params sharded over ctx.fsdp_axes (+ TP); the per-layer all_gather's
         AD transpose IS the ZeRO-3 reduce-scatter.  With HSDP (fsdp over
         "data" only) the surviving pod-axis reduction runs the compressor on
@@ -88,6 +95,22 @@ class TrainSetup:
 
     # ------------------------------------------------------------------
     @property
+    def comm(self):
+        """The collective schedule (CommPlan) the aggregation runs —
+        docs/comm_api.md; carried by the aggregator config."""
+        return self.agg_cfg.comm
+
+    @property
+    def rtob(self) -> bool:
+        """Is the integrated reduce-to-owner/broadcast path active?  Then
+        gradients are NOT bucket-aggregated: the update's owner-aligned
+        ring reduce-scatter is the only gradient collective, and the
+        updated params ride the broadcast (gather) leg — half the
+        exchanged bytes of all-reduce + gather."""
+        return (self.zero1 and self.agg_cfg.compressor == "none"
+                and self.comm.kind == "reduce_to_owner_broadcast")
+
+    @property
     def all_axes(self) -> tuple[str, ...]:
         return tuple(self.mesh.axis_names)
 
@@ -125,6 +148,11 @@ def build(arch: ArchConfig, mesh: Mesh,
     else:
         fsdp_axes = ()
     zero1 = plan.dp_mode == "ddp" and plan.zero1
+    if plan.comm == "reduce_to_owner_broadcast" and not zero1:
+        from repro.parallel import commplan as cp
+        raise cp.CommPlanError(
+            "comm='reduce_to_owner_broadcast' needs an owner-sharded "
+            "update: dp_mode='ddp' with zero1=True")
     if plan.overlap:
         from repro.train import overlap as overlap_mod
         overlap_mod.check_supported(arch, plan)
@@ -360,21 +388,63 @@ def fresh_agg_state(setup: TrainSetup, key):
     return jax.jit(init_fn, out_shardings=shardings)(key)
 
 
-def _zero1_own_slice(setup: TrainSetup, layout, plan: bucketing.OwnerPlan,
-                     buckets: list) -> jax.Array:
-    """This DP rank's owned shard, (cap,) fp32: concat the buckets, pad so
-    every rank's static-length slice stays in range, and slice from the
-    rank-indexed start (ownership runs are contiguous — OwnerPlan)."""
-    cap = plan.cap
-    pad = max(s + cap for s in plan.starts) - layout.n_elements
+def _zero1_flat(layout, plan: bucketing.OwnerPlan,
+                buckets: list) -> jax.Array:
+    """Owner-sliceable fp32 flat vector: concat the buckets and pad so
+    every rank's static-length (cap) slice from its start stays in range
+    (ownership runs are contiguous — OwnerPlan).  The single layout both
+    zero1 gradient legs slice from."""
+    pad = max(s + plan.cap for s in plan.starts) - layout.n_elements
     parts = [b.astype(jnp.float32).reshape(-1) for b in buckets]
     if pad:
         parts.append(jnp.zeros((pad,), jnp.float32))
-    flat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def _zero1_own_slice(setup: TrainSetup, layout, plan: bucketing.OwnerPlan,
+                     buckets: list) -> jax.Array:
+    """This DP rank's owned shard, (cap,) fp32, sliced from the
+    rank-indexed start of the padded flat layout."""
+    flat = _zero1_flat(layout, plan, buckets)
     dp = tuple(setup.dp_axes)
     rank = jax.lax.axis_index(dp) if dp else jnp.int32(0)
     starts = jnp.asarray(plan.starts, jnp.int32)
-    return jax.lax.dynamic_slice_in_dim(flat, starts[rank], cap)
+    return jax.lax.dynamic_slice_in_dim(flat, starts[rank], plan.cap)
+
+
+def _zero1_rtob_own_grad(setup: TrainSetup, layout,
+                         plan: bucketing.OwnerPlan, buckets):
+    """The ``reduce_to_owner_broadcast`` gradient leg: lay the RAW local
+    gradient out as owner-aligned ``(p_dp · cap)`` tiles and run ONE ring
+    reduce-scatter — each rank receives the SUM of exactly its owned
+    shard (``n·(p-1)/p`` bytes when the owner plan is balanced: the wire
+    moves ``p·cap ≈ n`` elements, the same cap-padding convention the
+    param gather has always had; ``owner_plan`` warns when imbalance
+    makes ``cap`` exceed 2× the ideal n/p), then ``/p_dp`` makes it the
+    mean.  The global grad norm of the mean gradient comes from a
+    psum of each rank's masked owned sum-of-squares (the cap-padded tile
+    tail overlaps the next rank's region and must not count).  Clipping
+    matches ``clip_by_global_norm`` semantics on the owned shard.
+
+    Returns ``(g_own_mean_clipped, grad_norm)``.
+    """
+    from repro.parallel import commplan as cp
+    cap = plan.cap
+    flat = _zero1_flat(layout, plan, buckets)
+    tiles = jnp.concatenate([jax.lax.slice_in_dim(flat, s, s + cap)
+                             for s in plan.starts])
+    dp = tuple(setup.dp_axes)
+    summed = cp.owner_reduce_scatter(tiles, dp)           # (cap,) own sum
+    g_own = summed / jax.lax.psum(1, dp)                  # own mean
+    rank = jax.lax.axis_index(dp)
+    ln = jnp.asarray(plan.lengths, jnp.int32)[rank]
+    masked = jnp.where(jnp.arange(cap) < ln, g_own, 0.0)
+    gnorm = jnp.sqrt(jax.lax.psum(jnp.sum(jnp.square(masked)), dp))
+    c = setup.opt_cfg
+    if c.grad_clip:
+        scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-12))
+        g_own = g_own * scale
+    return g_own, gnorm
 
 
 def zero1_apply(setup: TrainSetup, layout, plan: bucketing.OwnerPlan,
@@ -384,25 +454,36 @@ def zero1_apply(setup: TrainSetup, layout, plan: bucketing.OwnerPlan,
     overlap schedules bit-identical under ``zero1=True``):
 
       1. clip grads by global norm (same semantics as ``AdamW.update``),
-      2. slice this rank's OWNED buckets out of the aggregated gradient,
+      2. slice this rank's OWNED buckets out of the aggregated gradient —
+         or, under the ``reduce_to_owner_broadcast`` comm plan, reduce the
+         RAW gradient straight to its owners with one ring reduce-scatter
+         (``_zero1_rtob_own_grad``; the buckets were never all-reduced),
       3. flat AdamW on the fp32 master shard (``flat_adamw_update``),
       4. all-gather the updated working-dtype params through the Payload
          reduce machinery (a parameter shard is a non-associative payload:
-         every peer needs every owner's tensors verbatim),
-      5. reassemble the parameter pytree from the gathered buckets.
+         every peer needs every owner's tensors verbatim — under the rtob
+         plan this IS the broadcast leg, and the only other collective of
+         the step),
+      5. reassemble the parameter pytree from the gathered pieces
+         (``OwnerPlan.pieces``; a bucket split across owners concatenates
+         its per-owner slices).
 
     Returns ``(new_params, new_opt_state, grad_norm)``.
     """
     from repro.core.compression import base as cbase
     c = setup.opt_cfg
     assert c.name == "adamw", "zero1 shards flat AdamW state"
-    if c.grad_clip:
-        grads, gnorm = opt_mod.clip_by_global_norm(
-            grads, setup.param_specs, c.grad_clip)
-    else:
-        gnorm = opt_mod.global_norm(grads, setup.param_specs)
     t = opt_state["t"] + 1
-    g_own = _zero1_own_slice(setup, layout, plan, buckets_of(grads))
+    if setup.rtob:
+        g_own, gnorm = _zero1_rtob_own_grad(setup, layout, plan,
+                                            buckets_of(grads))
+    else:
+        if c.grad_clip:
+            grads, gnorm = opt_mod.clip_by_global_norm(
+                grads, setup.param_specs, c.grad_clip)
+        else:
+            gnorm = opt_mod.global_norm(grads, setup.param_specs)
+        g_own = _zero1_own_slice(setup, layout, plan, buckets_of(grads))
     st = jax.tree.map(lambda x: x[0], opt_state["shard"])
     master, mv = opt_mod.flat_adamw_update(
         st["master"], g_own, {"m": st["m"], "v": st["v"]}, t, lr, c)
@@ -411,10 +492,12 @@ def zero1_apply(setup: TrainSetup, layout, plan: bucketing.OwnerPlan,
     gathered = cbase.reduce_payload(payload, setup.dp_axes) \
         .tensors["shard"]                       # (p_dp, cap)
     flat_p = gathered.reshape(-1)
-    new_buckets = [
-        jax.lax.slice_in_dim(flat_p, plan.param_offset(b),
-                             plan.param_offset(b) + layout.sizes[b])
-        for b in range(layout.n_buckets)]
+    new_buckets = []
+    for b in range(layout.n_buckets):
+        segs = [jax.lax.slice_in_dim(flat_p, off, off + ln)
+                for off, ln in plan.pieces[b]]
+        new_buckets.append(segs[0] if len(segs) == 1
+                           else jnp.concatenate(segs))
     new_params = unbuckets(new_buckets, params)
     new_opt = {"t": t,
                "shard": jax.tree.map(lambda x: x[None],
@@ -535,12 +618,15 @@ def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
         return out, agg_states
 
     def aggregate_raw(grads):
-        """none-compressor path: plain pmean over the configured axes."""
+        """none-compressor path: one mean over the configured axes, moved
+        by the configured CommPlan (auto -> pmean, the historic path)."""
+        from repro.parallel import commplan as cp
         axes = tuple(setup.agg_cfg.raw_axes) + \
             tuple(setup.agg_cfg.compress_axes)
         if not axes:
             return grads
-        return jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
+        plan = setup.agg_cfg.comm
+        return jax.tree.map(lambda g: cp.mean_reduce(g, axes, plan), grads)
 
     update_fn = make_update_fn(setup, layout)
 
@@ -570,7 +656,12 @@ def make_step(setup: TrainSetup, accum: int = 1, xent_chunk: int = 1024):
             grads, loss_sum, ntok, aux = one_micro(params, batch)
 
         grads = norm_replicated_over_fsdp(grads)
-        if setup.agg_cfg.compressor == "none":
+        if setup.rtob:
+            # reduce_to_owner_broadcast: no gradient all-reduce — the
+            # update's owner-aligned ring reduce-scatter is the only
+            # gradient collective (zero1_apply)
+            new_agg = state["agg"]
+        elif setup.agg_cfg.compressor == "none":
             grads = aggregate_raw(grads)
             new_agg = state["agg"]
         else:

@@ -44,11 +44,27 @@ def test_front_door_topology():
     readme = set(_links("README.md"))
     assert "docs/index.md" in readme
     index = set(_links("docs/index.md"))
-    for doc in ("compression_api.md", "overlap.md", "experiments_api.md"):
+    for doc in ("compression_api.md", "overlap.md", "experiments_api.md",
+                "comm_api.md"):
         assert doc in index, f"docs/index.md missing link to {doc}"
         back = set(_links(os.path.join("docs", doc)))
         assert "index.md" in back, f"docs/{doc} does not link back to index"
     assert "../README.md" in index
+
+
+def test_readme_architecture_map_covers_src_packages():
+    """The README architecture map must mention every top-level
+    ``src/repro/*`` package — catches silent drift when a PR grows a new
+    subsystem (e.g. ``parallel/commplan.py``) without fronting it."""
+    src = os.path.join(ROOT, "src", "repro")
+    pkgs = sorted(
+        d for d in os.listdir(src)
+        if os.path.isdir(os.path.join(src, d)) and not d.startswith("__"))
+    assert pkgs, "src/repro has no packages?"
+    text = open(os.path.join(ROOT, "README.md")).read()
+    missing = [p for p in pkgs if f"{p}/" not in text]
+    assert not missing, \
+        f"README architecture map omits src/repro packages: {missing}"
 
 
 def test_readme_mentions_tier1_and_headline():

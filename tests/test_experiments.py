@@ -65,10 +65,11 @@ def test_spec_hash_stability():
     b = ExperimentSpec(workload="resnet50", method="signsgd", workers=8)
     assert a.spec_hash() == b.spec_hash()
     assert a.spec_hash() != dataclasses.replace(a, workers=16).spec_hash()
-    # wire-format rev 3: the ``zero1`` and ``accum`` knobs joined the
-    # spec (rev 2 added ``overlap``); old stored rows still load via
-    # from_json defaults, but hashes intentionally moved.
-    assert a.spec_hash() == "9b265ece225971dc", a.spec_hash()
+    # wire-format rev 4: the ``comm`` knob (CommPlan kind) joined the
+    # spec (rev 3 added ``zero1``/``accum``, rev 2 ``overlap``); old
+    # stored rows still load via from_json defaults, but hashes
+    # intentionally moved.
+    assert a.spec_hash() == "b86cabb9d66e7911", a.spec_hash()
 
 
 def test_paper_matrix_size_and_uniqueness():
@@ -169,6 +170,86 @@ def test_baseline_spec_reports_sync_only():
     assert r.ok and "t_method_s" not in r.metrics
     assert r.metrics["required_ratio"] == pytest.approx(
         pm.required_compression(cal.RESNET50, 64, cal.PAPER_HW))
+
+
+# ------------------------------------------------------------ comm axis
+def test_comm_axis_round_trips_and_reshuffles_hash():
+    """Wire rev 4: the comm field JSON-round-trips and is part of the
+    spec's content identity."""
+    spec = ExperimentSpec(workload="resnet50", method="syncsgd",
+                          workers=64, comm="gather_all")
+    back = ExperimentSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    assert back == spec and back.comm == "gather_all"
+    assert spec.spec_hash() != dataclasses.replace(
+        spec, comm="auto").spec_hash()
+    # pre-rev-4 stored rows (no comm key) load with the auto default
+    old = spec.to_json()
+    del old["comm"]
+    assert ExperimentSpec.from_json(old).comm == "auto"
+
+
+def test_analytic_backend_reflects_comm_plan():
+    """The comm axis changes what the baseline pays: a gather-based
+    syncSGD is costed by the per-plan model (``pm.sync_sgd_plan_time``),
+    and the per-plan byte accounting is derived from the same CommPlan
+    the runtime executes."""
+    from repro.parallel.commplan import CommPlan
+    w, p, hw = cal.RESNET50, 64, cal.PAPER_HW
+    auto = AnalyticBackend().run(ExperimentSpec(
+        workload="resnet50", method="syncsgd", workers=p))
+    gat = AnalyticBackend().run(ExperimentSpec(
+        workload="resnet50", method="syncsgd", workers=p,
+        comm="gather_all"))
+    assert auto.ok and gat.ok, (auto.error, gat.error)
+    assert gat.metrics["t_sync_s"] == pm.sync_sgd_plan_time(
+        w, p, hw, "gather_all")
+    assert gat.metrics["t_sync_s"] > auto.metrics["t_sync_s"]
+    assert gat.metrics["grad_exchange_bytes"] == CommPlan(
+        "gather_all").wire_bytes(w.model_bytes, p,
+                                 hw.allgather_congestion)
+    # the explicit ring plans reproduce the historic auto numbers
+    ring = AnalyticBackend().run(ExperimentSpec(
+        workload="resnet50", method="syncsgd", workers=p,
+        comm="reduce_scatter_allgather"))
+    assert ring.metrics["t_sync_s"] == pytest.approx(
+        auto.metrics["t_sync_s"])
+
+
+def test_analytic_backend_comm_legality_is_enforced():
+    """Associativity constrains plan choice in the model exactly as in
+    the runtime: a non-associative method under a mean-reducing plan is
+    an error cell, not a silently wrong number."""
+    r = AnalyticBackend().run(ExperimentSpec(
+        workload="resnet50", method="signsgd", workers=16,
+        comm="allreduce"))
+    assert r.status == "error" and "non-associative" in r.error
+    # reduce_to_owner_broadcast needs a sharded uncompressed consumer
+    r2 = AnalyticBackend().run(ExperimentSpec(
+        workload="resnet50", method="syncsgd", workers=16,
+        comm="reduce_to_owner_broadcast"))
+    assert r2.status == "error" and "zero1" in r2.error
+
+
+def test_zero1_rtob_halves_exchanged_bytes():
+    """The ROADMAP follow-up, as numbers: for an uncompressed ZeRO-1
+    cell, reduce-to-owner + broadcast moves <= 0.55x the bytes of
+    all-reduce + param-gather (the bench-smoke comm anchor)."""
+    w, p, hw = cal.RESNET50, 16, cal.PAPER_HW
+
+    def cell_bytes(comm):
+        return (pm.grad_exchange_bytes(w, p, hw, comm)
+                + pm.zero1_exchange_bytes(w, p, hw, comm=comm))
+
+    ratio = cell_bytes("reduce_to_owner_broadcast") / cell_bytes("auto")
+    assert ratio <= 0.55, ratio
+
+
+def test_paper_matrix_comm_expansion():
+    grid = Grid.paper_matrix(comm=("auto", "gather_all"))
+    specs = grid.specs()
+    assert len(specs) == 2 * len(Grid.paper_matrix().specs())
+    assert {s.comm for s in specs} == {"auto", "gather_all"}
+    assert len({s.spec_hash() for s in specs}) == len(specs)
 
 
 # ------------------------------------------------------------ runner/store

@@ -203,11 +203,35 @@ def test_zero1_owner_plan_covers_buckets():
         assert plan.starts[r] <= plan.bucket_offsets[b]
         assert plan.bucket_offsets[b] + layout.sizes[b] \
             <= plan.starts[r] + plan.lengths[r]
-    # more ranks than buckets: trailing ranks own nothing — still a valid
-    # plan (the bit-identity oracles run it) but warned as degenerate
-    with pytest.warns(UserWarning, match="degenerate"):
-        plan2 = bucketing.owner_plan(layout, layout.n_buckets + 3)
+    # single-owner buckets expose exactly one gathered-space piece whose
+    # offset matches the historic param_offset layout
+    for b in range(layout.n_buckets):
+        assert plan.pieces[b] == ((plan.param_offset(b), layout.sizes[b]),)
+    # more ranks than buckets: the largest buckets are SPLIT so every
+    # rank still owns a contiguous sub-bucket (no degenerate trailing
+    # ranks), and split buckets reassemble from their per-owner pieces
+    n_ranks = layout.n_buckets + 3
+    plan2 = bucketing.owner_plan(layout, n_ranks)
     assert sum(plan2.lengths) == layout.n_elements
+    assert all(ln > 0 for ln in plan2.lengths)          # full coverage
+    assert plan2.cap < layout.n_elements                # state shrinks
+    # the real contract: slicing each bucket's pieces out of the
+    # (p·cap) gathered-shard space reconstructs the flat bucket exactly
+    # (zero1_apply's reassembly, simulated on the host)
+    flat = np.arange(layout.n_elements)
+    gathered = np.concatenate([
+        np.pad(flat[plan2.starts[r]:plan2.starts[r] + plan2.lengths[r]],
+               (0, plan2.cap - plan2.lengths[r]), constant_values=-1)
+        for r in range(n_ranks)])
+    for b in range(layout.n_buckets):
+        got = np.concatenate([gathered[off:off + ln]
+                              for off, ln in plan2.pieces[b]])
+        lo = plan2.bucket_offsets[b]
+        np.testing.assert_array_equal(got, flat[lo:lo + layout.sizes[b]])
+    # ownership stays contiguous in flat element space
+    assert sorted(plan2.starts)[0] == 0
+    assert max(plan2.starts[r] + plan2.lengths[r]
+               for r in range(n_ranks)) == layout.n_elements
 
 
 def test_zero1_matches_replicated_adamw():

@@ -195,6 +195,100 @@ def test_third_party_registration_without_editing_core():
         cbase._REGISTRY.pop("_test_identity", None)
 
 
+# ----------------------------------------------- comm-plan wire accounting
+def test_reduce_payload_takes_a_comm_plan(g):
+    """The collective schedule is an explicit CommPlan argument; the
+    ring decomposition returns the same mean as the historic dispatch and
+    illegal (plan, payload) combinations raise."""
+    from repro.parallel import commplan as cp
+    mesh = make_mesh((1,), ("data",))
+
+    def run(b):
+        auto = cbase.Payload({"x": b}).reduce(("data",))
+        ring = cbase.Payload({"x": b}).reduce(
+            ("data",), cp.CommPlan("reduce_scatter_allgather"))
+        return auto.tensors["x"], ring.tensors["x"]
+
+    f = shard_map(run, mesh, in_specs=(P(None),),
+                  out_specs=(P(None), P(None)))
+    auto, ring = f(g)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(ring))
+    with pytest.raises(cp.CommPlanError):
+        cbase.reduce_payload(cbase.Payload({"x": g}, associative=False),
+                             ("data",), cp.CommPlan("allreduce"))
+
+
+def _abstract_rounds(comp, n):
+    """Shape-faithful wire payloads without running the encode math
+    (``wire_spec`` reads only shapes/dtypes, so eval_shape suffices)."""
+    def f(key):
+        bucket = jnp.zeros((n,), jnp.float32)
+        return comp.wire_rounds(bucket, comp.init_state(n, key))
+    return jax.eval_shape(f, jax.random.key(0))
+
+
+def _check_plan_bytes_round_trip(n: int, p: int, congestion: float):
+    """The ISSUE-5 invariant: for EVERY registered compressor × EVERY
+    legal CommPlan, the bytes declared by the runtime payloads'
+    ``wire_spec`` feed the per-plan byte formula to exactly the same
+    number the perf model computes from its derived ``CompressionSpec`` —
+    so per-plan analytic bytes can never drift from what the runtime
+    would put on the wire.  Illegal combinations raise on BOTH sides."""
+    from repro.core.perfmodel import costs
+    from repro.parallel import commplan as cp
+    for name, kw in METHODS:
+        comp = cbase.make(name, **kw)
+        payloads = _abstract_rounds(comp, n)
+        runtime_rounds = [
+            sum(e["nbytes"] for e in pl.wire_spec().values())
+            for pl in payloads]
+        cspec = CompressionSpec.for_compressor(comp, n,
+                                               t_encode_decode=0.0)
+        assert tuple(runtime_rounds) == comp.wire_round_bytes(n) \
+            == cspec.payload_bytes
+        for kind in cp.KINDS:
+            plan = cp.CommPlan(kind)
+            if not plan.legal_for(comp.associative):
+                with pytest.raises(cp.CommPlanError):
+                    costs.plan_collective(plan, comp.associative,
+                                          float(n), p, 1e9, 1e-6)
+                continue
+            resolved = plan.resolve(comp.associative)
+            runtime_bytes = sum(resolved.wire_bytes(b, p, congestion)
+                                for b in runtime_rounds)
+            model_bytes = sum(resolved.wire_bytes(b, p, congestion)
+                              for b in cspec.payload_bytes)
+            assert runtime_bytes == model_bytes
+            if kind in ("allreduce", "reduce_scatter_allgather"):
+                assert runtime_bytes == \
+                    2.0 * sum(runtime_rounds) * (p - 1) / p
+            if kind == "gather_all":
+                assert runtime_bytes == \
+                    congestion * sum(runtime_rounds) * (p - 1)
+
+
+def test_plan_bytes_round_trip_fixed_point():
+    """One pinned instance of the property (runs even without the
+    dev-only hypothesis dep)."""
+    _check_plan_bytes_round_trip(n=1000, p=96, congestion=2.0)
+
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:                               # dev-only dep
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(n=hst.integers(min_value=200, max_value=4096),
+           p=hst.sampled_from([2, 4, 16, 96]),
+           congestion=hst.floats(min_value=1.0, max_value=2.0))
+    def test_every_compressor_every_legal_plan_bytes_round_trip(
+            n, p, congestion):
+        _check_plan_bytes_round_trip(n, p, congestion)
+
+
 # ------------------------------------------------------------ matrix_shape
 @pytest.mark.parametrize("n", [1, 2, 3, 5, 16, 127, 128, 129, 1000, 4096,
                                1 << 20])
