@@ -278,8 +278,11 @@ def headline_200_setups(store: str | None = None, resume: bool = False):
     """Paper abstract: "only in 6 cases out of more than 200 [setups],
     gradient compression methods provide speedup over optimized
     synchronous data-parallel training".  The whole matrix is one
-    ``Grid.paper_matrix()`` sweep through the experiments Runner; pass
-    ``store`` (a JSON-lines path) to persist the trajectory.
+    ``Grid.paper_matrix()`` sweep through the experiments Runner — plus
+    one ``Grid.adaptive_matrix()`` controller cell per (workload, p)
+    setup, reported in the separate ``adaptive`` headline row (it must
+    win-or-tie the best static scheme in EVERY setup); pass ``store`` (a
+    JSON-lines path) to persist the trajectory.
 
     ``resume`` defaults to False here on purpose: the spec hash covers
     the *setup*, not the perf-model code, and this sweep is the anchor
@@ -291,11 +294,19 @@ def headline_200_setups(store: str | None = None, resume: bool = False):
     runner = Runner(AnalyticBackend(),
                     store=ResultStore(store) if store else None,
                     resume=resume)
-    results = runner.run(Grid.paper_matrix())
+    results = runner.run(list(Grid.paper_matrix())
+                         + list(Grid.adaptive_matrix()))
     h = headline(results)
     rows = [dict(setups=h["setups"], wins=h["wins"],
                  win_rate=round(h["win_rate"], 4), **h["by_method"])]
-    rows += [dict(winner=wn["setup"], speedup=wn["speedup"])
+    if "adaptive" in h:
+        a = h["adaptive"]
+        rows.append(dict(adaptive_setups=a["setups"],
+                         adaptive_wins=a["wins"],
+                         adaptive_win_rate=round(a["win_rate"], 4),
+                         ties_or_beats_static=a["ties_or_beats_static"]))
+    rows += [dict(winner=wn["setup"], speedup=wn["speedup"],
+                  comm=wn["comm"])
              for wn in h["winners"]]
     return rows, headline_verdicts(h)
 

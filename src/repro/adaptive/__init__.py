@@ -1,0 +1,20 @@
+"""Adaptive compression: error-feedback + a perf-model-driven controller.
+
+Two halves (docs/adaptive.md):
+
+* :mod:`repro.adaptive.feedback` — the ``ef:<name>`` error-feedback
+  wrapper on the Payload contract (residual added pre-encode, decode
+  error written back post-reduce, state checkpointed with the optimizer);
+* :mod:`repro.adaptive.policy` / :mod:`repro.adaptive.controller` — the
+  per-bucket decision rule that compresses only when the performance
+  model (corrected by measured feedback) predicts a win, and otherwise
+  falls back to the overlapped syncSGD baseline.
+"""
+from repro.adaptive.controller import (BucketController,  # noqa: F401
+                                       ControllerConfig, resolve_plan,
+                                       workload_for_arch)
+from repro.adaptive.feedback import (EF_PREFIX, EFState,  # noqa: F401
+                                     ErrorFeedback, wrap_error_feedback)
+from repro.adaptive.policy import (Candidate, Decision,  # noqa: F401
+                                   bucket_workloads, decide,
+                                   paper_candidates)

@@ -1,0 +1,127 @@
+"""Error feedback as a wrapper on the Payload contract.
+
+``ef:<name>`` wraps any registered compressor in a per-bucket fp32
+residual accumulator (Seide et al., 2014; Karimireddy et al., 2019 —
+the "desirable property" the paper's wishlist and ScaleCom single out):
+
+    encode     runs on  g + residual          (residual added pre-encode)
+    decode     returns  mean  as usual, and writes back
+    residual' = (g + residual) - own_decoded  (the part this device failed
+                                               to put on the wire)
+
+``own_decoded`` is reconstructed from ``payload.local`` — the device's own
+pre-reduce tensors that :func:`repro.core.compression.base.reduce_payload`
+keeps off the wire exactly for this purpose — so the wrapper needs no
+second encode and no knowledge of the inner scheme's math.
+
+The wrapped state is one pytree (:class:`EFState` = inner state + the
+``(n,)`` fp32 residual), so the existing per-bucket state machinery —
+``GradAggregator.init_bucketed_state``, the train step's ``(n_dev, ...)``
+leading-dim broadcast, the overlap ``_Flush`` engine, ZeRO-1, checkpoint
+save/restore — threads it with **zero** changes to those layers.
+
+Compressors with their own ``error_feedback`` switch are wrapped with the
+inner switch forced off (the wrapper owns the one residual; double
+compensation would re-inject stale error twice).  PowerSGD's error
+feedback is structural (the warm-start/err state is not optional) and is
+rejected — use plain ``powersgd``, which is already compensated.
+
+Wiring: ``cbase.make("ef:randomk", frac=0.01)`` and
+``ParallelPlan.compression = "ef:randomk"`` both resolve here via the
+``ef:`` prefix hooks in ``repro.core.compression.base``.  See
+docs/adaptive.md.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression.base import Compressor, Payload
+
+#: the factory prefix: ``make("ef:<name>", **inner_kwargs)``.
+EF_PREFIX = "ef:"
+
+
+class EFState(NamedTuple):
+    """Inner compressor state + the wrapper's fp32 residual accumulator."""
+    inner: Any
+    residual: jax.Array     # (n,) fp32
+
+
+class ErrorFeedback(Compressor):
+    """Wrap ``inner`` with a pre-encode residual add + post-decode
+    residual update.  Delegates associativity, wire accounting and the
+    multi-phase structure to the inner compressor."""
+
+    def __init__(self, inner: Compressor):
+        if getattr(inner, "builtin_error_feedback", False):
+            raise ValueError(
+                f"{inner.name!r} has structural (always-on) error feedback;"
+                " wrapping it in ef: would compensate twice — use the plain"
+                " compressor")
+        if getattr(inner, "error_feedback", False):
+            # the wrapper owns the single residual
+            inner.error_feedback = False
+        self.inner = inner
+        self.associative = inner.associative
+        self.name = f"ef:{inner.name}"
+        self.registry_name = f"ef:{inner.registry_name}"
+        self.error_feedback = True
+
+    # ---- state ----------------------------------------------------------
+    def init_state(self, n: int, key: jax.Array) -> EFState:
+        k_inner, _ = jax.random.split(key)
+        return EFState(inner=self.inner.init_state(n, k_inner),
+                       residual=jnp.zeros((n,), jnp.float32))
+
+    def _carry(self, bucket: jax.Array, state: EFState) -> jax.Array:
+        """The error-compensated fp32 gradient the inner scheme encodes."""
+        return bucket.astype(jnp.float32) + state.residual
+
+    # ---- phase 1 --------------------------------------------------------
+    def encode(self, bucket: jax.Array, state: EFState,
+               rank: Optional[jax.Array] = None) -> Payload:
+        return self.inner.encode(self._carry(bucket, state), state.inner,
+                                 rank=rank)
+
+    # phase 2 is inherited: the base ``encode_and_reduce`` calls
+    # ``self.encode`` (compensated) and the shared ``reduce_payload``.
+    # Inner compressors that override the reduce structure (PowerSGD) are
+    # rejected in __init__, so the default composition is always faithful.
+
+    # ---- phase 3 --------------------------------------------------------
+    def decode(self, payload: Payload, bucket: jax.Array, state: EFState):
+        g = self._carry(bucket, state)
+        mean, new_inner = self.inner.decode(payload, g, state.inner)
+        own = self._own_decoded(payload, g, state)
+        return mean.astype(bucket.dtype), \
+            EFState(inner=new_inner, residual=g - own.astype(jnp.float32))
+
+    def _own_decoded(self, payload: Payload, g: jax.Array,
+                     state: EFState) -> jax.Array:
+        """What THIS device managed to put on the wire, reconstructed by
+        re-decoding ``payload.local`` as a single-peer payload."""
+        local = payload.local
+        if local is None:       # host-side decode of a never-reduced payload
+            local = payload.tensors
+        tensors = local if payload.associative else \
+            jax.tree.map(lambda t: t[None], local)   # peer axis of size 1
+        own_payload = Payload(tensors, associative=payload.associative,
+                              reduced=True, local=local)
+        own, _ = self.inner.decode(own_payload, g, state.inner)
+        return own
+
+    # ---- wire accounting / perf-model hooks: the inner scheme's ---------
+    def wire_rounds(self, bucket: jax.Array, state: EFState) -> list[Payload]:
+        return self.inner.wire_rounds(self._carry(bucket, state), state.inner)
+
+    def encode_decode_flops(self, n: int) -> float:
+        # + the residual add and subtract
+        return self.inner.encode_decode_flops(n) + 2.0 * n
+
+
+def wrap_error_feedback(inner: Compressor) -> ErrorFeedback:
+    """``ef:`` factory body (called by ``cbase.make`` on the prefix)."""
+    return ErrorFeedback(inner)

@@ -36,6 +36,11 @@ def _paths(tree) -> list[str]:
     return ["/".join(str(k) for k in path) for path, _ in flat]
 
 
+def _is_key(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype,
+                                                  jax.dtypes.prng_key)
+
+
 def save(dirname: str, step: int, state, cursor: Optional[int] = None):
     """Atomic write of a (possibly sharded) state pytree."""
     final = os.path.join(dirname, f"step_{step:09d}")
@@ -44,6 +49,13 @@ def save(dirname: str, step: int, state, cursor: Optional[int] = None):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     leaves, treedef = jax.tree_util.tree_flatten(state)
+    # typed PRNG keys (compressor state: randomk/ef: carry one per bucket)
+    # are stored as their uint32 key data + the impl name, and re-wrapped
+    # on restore — np.save has no kernel for the opaque key dtype
+    prng = [str(jax.random.key_impl(lf)) if _is_key(lf) else None
+            for lf in leaves]
+    leaves = [jax.random.key_data(lf) if p else lf
+              for lf, p in zip(leaves, prng)]
     host_leaves = jax.device_get(leaves)       # gathers global arrays
     index = []
     for i, leaf in enumerate(host_leaves):
@@ -56,8 +68,11 @@ def save(dirname: str, step: int, state, cursor: Optional[int] = None):
                     np.frombuffer(arr.tobytes(), np.uint8))
         else:
             np.save(os.path.join(tmp, fn), arr)
-        index.append({"file": fn, "shape": list(arr.shape),
-                      "dtype": str(arr.dtype), "raw": raw})
+        entry = {"file": fn, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype), "raw": raw}
+        if prng[i]:
+            entry["prng"] = prng[i]
+        index.append(entry)
     meta = {"step": step, "cursor": cursor, "n_leaves": len(index),
             "paths": _paths(state), "index": index}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
@@ -115,6 +130,26 @@ def restore(dirname: str, step: int, like, shardings=None,
             dt = np.dtype(getattr(ml_dtypes, entry["dtype"]))
             arr = np.frombuffer(arr.tobytes(), dt).reshape(entry["shape"])
         want_shape = tuple(like_leaf.shape)
+        if entry.get("prng"):
+            # the like leaf has the opaque key shape; the stored array is
+            # its key DATA, carrying the impl's trailing dims on top
+            trail = jax.eval_shape(
+                lambda: jax.random.key_data(
+                    jax.random.key(0, impl=entry["prng"]))).shape
+            if arr.shape[:arr.ndim - len(trail)] != want_shape:
+                if not reset_device_state:
+                    raise ValueError(
+                        f"leaf {meta['paths'][i]}: checkpoint {arr.shape} "
+                        f"vs state {want_shape}; pass "
+                        "reset_device_state=True for elastic restore "
+                        "(per-device state resets)")
+                arr = np.zeros(want_shape + trail, arr.dtype)
+            leaf = jax.random.wrap_key_data(jnp.asarray(arr),
+                                            impl=entry["prng"])
+            if shard_leaves[i] is not None:
+                leaf = jax.device_put(leaf, shard_leaves[i])
+            out.append(leaf)
+            continue
         if arr.shape != want_shape:
             if not reset_device_state:
                 raise ValueError(

@@ -83,6 +83,12 @@ class ParallelPlan:
     # optimized-syncSGD baseline, §2.2).  repro.train.overlap; degrades to
     # the serial schedule for non-associative compressors (Table 3).
     overlap: bool = False
+    # launch-time adaptive compression (docs/adaptive.md): let the perf
+    # model pick compression/comm/overlap before the step is built
+    # (repro.adaptive.controller.resolve_plan).  Resolved plans carry
+    # adaptive=False, so the rest of the stack only ever sees static
+    # plans; the fallback choice is overlapped syncSGD.
+    adaptive: bool = False
     # training parameter storage dtype.  "bfloat16" = T5X-style low-memory
     # training (bf16 weights + fp32 adafactor stats) — what makes
     # arctic-480b's 1.9 TB of fp32 masters unnecessary (DESIGN.md §5).

@@ -48,6 +48,11 @@ Compressors register with ``@register_compressor(name, **plan_fields)``.
 The registry is the single source of ParallelPlan -> constructor-kwargs
 plumbing (``plan_kwargs``) and lets third-party plugins add schemes without
 editing core files.  See docs/compression_api.md.
+
+Any registered name also resolves with the ``ef:`` prefix
+(``make("ef:randomk", frac=0.01)``): the error-feedback wrapper from
+``repro.adaptive.feedback`` around the inner compressor, with the inner
+scheme's plan-field mapping (docs/adaptive.md).
 """
 from __future__ import annotations
 
@@ -167,6 +172,9 @@ class Compressor:
     name: str = "abstract"
     #: True -> payloads reduce with a mean (all-reduce); paper Table 3.
     associative: bool = True
+    #: True -> error feedback is structural (always-on state, PowerSGD):
+    #: the ``ef:`` wrapper rejects these instead of compensating twice.
+    builtin_error_feedback: bool = False
 
     @property
     def all_reduce_compatible(self) -> bool:
@@ -289,23 +297,41 @@ def registry() -> dict[str, CompressorSpec]:
     return dict(_REGISTRY)
 
 
+#: name prefix resolving to the error-feedback wrapper (docs/adaptive.md).
+EF_PREFIX = "ef:"
+
+
 def make(name: str, **kw) -> Compressor:
-    """Factory: ``make('powersgd', rank=4)`` etc."""
+    """Factory: ``make('powersgd', rank=4)`` etc.  ``ef:<name>`` builds
+    the inner compressor and wraps it in error feedback
+    (``repro.adaptive.feedback``)."""
     _load_builtins()
+    if name.startswith(EF_PREFIX):
+        from repro.adaptive.feedback import wrap_error_feedback
+        return wrap_error_feedback(make(name[len(EF_PREFIX):], **kw))
     if name not in _REGISTRY:
         raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[name].cls(**kw)
 
 
+def plan_kwargs_for(name: str, plan) -> dict:
+    """Constructor kwargs for compressor ``name`` read off the registered
+    spec's declarative ParallelPlan field mapping; an ``ef:`` prefix
+    delegates to the inner scheme's mapping."""
+    _load_builtins()
+    if name.startswith(EF_PREFIX):
+        name = name[len(EF_PREFIX):]
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; "
+                       f"have {sorted(_REGISTRY)}")
+    spec = _REGISTRY[name]
+    return {kwarg: getattr(plan, field) for kwarg, field in spec.plan_fields}
+
+
 def plan_kwargs(plan) -> dict:
     """Constructor kwargs for ``plan.compression``, read off the registered
     spec's declarative field mapping."""
-    _load_builtins()
-    if plan.compression not in _REGISTRY:
-        raise KeyError(f"unknown compressor {plan.compression!r}; "
-                       f"have {sorted(_REGISTRY)}")
-    spec = _REGISTRY[plan.compression]
-    return {kwarg: getattr(plan, field) for kwarg, field in spec.plan_fields}
+    return plan_kwargs_for(plan.compression, plan)
 
 
 def from_plan(plan) -> Compressor:

@@ -65,6 +65,8 @@ class PowerSGDState(NamedTuple):
 @register_compressor("powersgd", rank="powersgd_rank")
 class PowerSGD(Compressor):
     associative = True
+    # err/warm-start state is not optional: reject the ef: wrapper
+    builtin_error_feedback = True
 
     def __init__(self, rank: int = 4, min_cols: int = 128):
         self.rank = rank

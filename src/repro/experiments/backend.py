@@ -133,14 +133,21 @@ class AnalyticBackend:
                     cspec, t_encode_decode=spec.t_encode_decode_s)
             return cspec
         if spec.method.startswith("live:"):
-            comp = make_live_compressor(spec.method)
+            method = spec.method
+            if spec.error_feedback:
+                # rev-5 EF flag: wrap the live compressor in the residual
+                # accumulator (repro.adaptive.feedback) before pricing
+                name, kw = parse_live_method(method)
+                if not name.startswith("ef:"):
+                    method = live_method_id(f"ef:{name}", **kw)
+            comp = make_live_compressor(method)
             n = spec.n_elements or int(w.model_bytes // 4)
             t_ed = spec.t_encode_decode_s
             if t_ed is None:
                 # analytical FLOP estimate on this spec's hardware (the
                 # table-2 pattern: matmul-shaped PowerSGD rides the MXU,
                 # everything else is VPU-bound at ~5% of peak)
-                eff = 0.4 if comp.registry_name == "powersgd" else 0.05
+                eff = 0.4 if "powersgd" in comp.registry_name else 0.05
                 t_ed = comp.encode_decode_flops(n) / (hw.peak_flops * eff)
             return pm.CompressionSpec.for_compressor(comp, n, t_ed)
         raise KeyError(f"unresolvable method {spec.method!r}")
@@ -191,7 +198,24 @@ class AnalyticBackend:
                 m["t_zero1_gather_s"] = t_z1
                 m["param_exchange_bytes"] = pm.zero1_exchange_bytes(
                     w, p, hw, comm=spec.comm)
-            if not spec.is_baseline:
+            if spec.is_adaptive:
+                # the adaptive controller's cell (repro.adaptive.policy):
+                # pick the fastest of {overlapped syncSGD} ∪ the Table-2
+                # schemes, so the row wins-or-ties the best static scheme
+                # and the baseline by construction
+                from repro.adaptive import policy
+                d = policy.decide(w, p, hw, policy.paper_candidates(
+                    w, comm=spec.comm), t_extra=t_z1, comm_base=spec.comm)
+                t = d.t_pred
+                m.update(
+                    t_method_s=t,
+                    speedup=t_sync / t,
+                    win=bool(t < t_sync * (1 - self.win_margin)),
+                    decision=d.scheme,
+                    decision_comm=d.comm,
+                    adaptive=True,
+                    associative=True)
+            elif not spec.is_baseline:
                 cspec = self._compression(spec, w, hw)
                 t = pm.compressed_plan_time(w, p, hw, cspec, spec.comm) \
                     + t_z1
@@ -220,15 +244,23 @@ def coerce_kv(v: str) -> Any:
 
 def parse_live_method(method: str) -> tuple[str, dict]:
     """``"live:<name>[:k=v...]"`` -> (compressor name, constructor kwargs),
-    e.g. ``live:powersgd:rank=8`` or ``live:qsgd:bits=4``."""
+    e.g. ``live:powersgd:rank=8`` or ``live:qsgd:bits=4``.  The
+    error-feedback wrapper's prefix nests: ``live:ef:randomk:frac=0.02``
+    -> ``("ef:randomk", {"frac": 0.02})``."""
     parts = method.split(":")
     if parts[0] != "live" or len(parts) < 2:
         raise ValueError(f"not a live method id: {method!r}")
+    name, rest = parts[1], parts[2:]
+    if name == "ef":
+        if not rest:
+            raise ValueError(f"ef: prefix needs an inner compressor: "
+                             f"{method!r}")
+        name, rest = f"ef:{rest[0]}", rest[1:]
     kw: dict[str, Any] = {}
-    for kv in parts[2:]:
+    for kv in rest:
         k, _, v = kv.partition("=")
         kw[k] = coerce_kv(v)
-    return parts[1], kw
+    return name, kw
 
 
 def make_live_compressor(method: str):
@@ -302,13 +334,27 @@ class MeasuredBackend:
         import repro
         method = spec.method
         plan_args: list[str] = []
+        adaptive_choice = None
+        if spec.is_adaptive:
+            # concretize the controller's pick for this arch/devices cell
+            # (repro.adaptive.controller), then measure the chosen plan —
+            # the measured row reports both the choice and its timing
+            from repro.adaptive import controller as actl
+            from repro.configs import base as cfg_base
+            arch_cfg = cfg_base.get(spec.workload)
+            _, decision = actl.resolve_plan(
+                arch_cfg.plan, arch_cfg, spec.workers or 4,
+                batch=spec.batch)
+            adaptive_choice = decision.scheme
+            method = "none" if decision.is_baseline else decision.scheme
         if method.startswith("live:"):
             # live kwargs (rank=8, bits=4, ...) must reach the bench's
             # ParallelPlan or the subprocess would silently measure the
             # default-parameter compressor under this spec's hash
             from repro.core.compression import base as cbase
             method, kw = parse_live_method(method)
-            field_of = dict(cbase.registry()[method].plan_fields)
+            inner = method[3:] if method.startswith("ef:") else method
+            field_of = dict(cbase.registry()[inner].plan_fields)
             for k, v in kw.items():
                 if k not in field_of:
                     return Result(spec, self.name, status="error",
@@ -344,6 +390,8 @@ class MeasuredBackend:
                           error=f"overlap_bench rc={proc.returncode}: "
                                 f"{proc.stderr[-800:]}")
         rec = json.loads(proc.stdout.strip().splitlines()[-1])
+        if adaptive_choice is not None:
+            rec["adaptive_choice"] = adaptive_choice
         return Result(spec, self.name, metrics=rec)
 
     # ---- live per-phase timing ------------------------------------------

@@ -88,6 +88,17 @@ class ExperimentSpec:
                     ``pm.compressed_plan_time``, legality enforced);
                     train: ``ParallelPlan.comm`` override on the measured
                     step.  Wire-format rev 4.
+      ``scheme``    "static" = the cell pins one method (historic
+                    behaviour); "adaptive" = the cell is the adaptive
+                    controller (``repro.adaptive``): per setup it picks
+                    the fastest of {overlapped syncSGD} ∪ the paper's
+                    Table-2 schemes from the perf model and reports the
+                    pick (``method="adaptive"`` implies it).  Rev 5.
+      ``error_feedback``  wrap a ``live:<name>`` method's compressor in
+                    the ``ef:`` residual accumulator
+                    (``repro.adaptive.feedback``); descriptive for named
+                    paper methods, which already carry EF where the
+                    original scheme does.  Wire-format rev 5.
 
     Inline overrides (None/0 = resolve from the calibration registry):
       workload: ``model_bytes``, ``t_comp_s``;
@@ -111,6 +122,8 @@ class ExperimentSpec:
     zero1: bool = False
     accum: int = 1
     comm: str = "auto"
+    scheme: str = "static"
+    error_feedback: bool = False
     # -- inline workload parameters (0.0 = resolve by name) --
     model_bytes: float = 0.0
     t_comp_s: float = 0.0
@@ -144,6 +157,12 @@ class ExperimentSpec:
     @property
     def is_baseline(self) -> bool:
         return self.method in BASELINE_METHODS
+
+    @property
+    def is_adaptive(self) -> bool:
+        """Adaptive-controller cell (``repro.adaptive``): the method is
+        chosen per setup instead of pinned by the spec."""
+        return self.scheme == "adaptive" or self.method == "adaptive"
 
     # ---- JSON round-trip ------------------------------------------------
     def to_json(self) -> dict:
@@ -267,3 +286,19 @@ class Grid:
         if tuple(comm) != ("auto",):
             axes["comm"] = list(comm)
         return cls.over(base, **axes)
+
+    @classmethod
+    def adaptive_matrix(cls,
+                        workloads: Sequence[str] = PAPER_WORKLOADS,
+                        workers: Sequence[int] = PAPER_WORKER_COUNTS,
+                        batch: int = 64) -> "Grid":
+        """One adaptive-controller cell per (workload × workers) setup of
+        the paper matrix: each cell picks the fastest of {overlapped
+        syncSGD} ∪ the Table-2 schemes (``repro.adaptive.policy``), so
+        its ``headline()`` row wins-or-ties the best static scheme by
+        construction — the paper's thesis as a benchmark anchor."""
+        base = ExperimentSpec(workload=workloads[0], hardware="paper",
+                              batch=batch, method="adaptive",
+                              scheme="adaptive")
+        return cls.over(base, workload=list(workloads),
+                        workers=list(workers))

@@ -35,6 +35,10 @@ def main(argv=None):
     ap.add_argument("--overlap", action="store_true",
                     help="DDP: fuse reverse-order bucketed aggregation "
                          "into the backward pass (repro.train.overlap)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="let the perf model pick compression/comm at "
+                         "launch (repro.adaptive; falls back to "
+                         "overlapped syncSGD when no win is predicted)")
     ap.add_argument("--sync-every", type=int, default=1)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
@@ -47,8 +51,9 @@ def main(argv=None):
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}")
-    if args.overlap:
-        # latency-hiding-scheduler flags must precede jax init (TPU only)
+    if args.overlap or args.adaptive:
+        # latency-hiding-scheduler flags must precede jax init (TPU only);
+        # adaptive resolves to an overlapped plan even on fallback
         from repro.train.overlap import enable_overlap_flags
         enable_overlap_flags()
 
@@ -92,6 +97,23 @@ def main(argv=None):
             print(f"[train] --overlap forces dp_mode='ddp' "
                   f"(arch plan had dp_mode={arch.plan.dp_mode!r})")
         overrides.update(overlap=True, dp_mode="ddp")
+    if args.adaptive:
+        import dataclasses
+
+        from repro.adaptive import controller as actl
+        plan = dataclasses.replace(arch.plan, **overrides)
+        if plan.dp_mode != "ddp":
+            print(f"[train] --adaptive forces dp_mode='ddp' "
+                  f"(arch plan had dp_mode={plan.dp_mode!r})")
+        plan, decision = actl.resolve_plan(
+            plan, arch, n_dev=mesh.devices.size,
+            batch=args.batch, seq=args.seq)
+        print(f"[train] adaptive: scheme={decision.scheme} "
+              f"comm={decision.comm} predicted "
+              f"{decision.t_pred * 1e3:.3f} ms/step vs overlapped "
+              f"syncSGD {decision.t_base * 1e3:.3f} ms/step")
+        arch = dataclasses.replace(arch, plan=plan)
+        overrides = {}
     setup = ts.build(arch, mesh, **overrides)
     sched = ""
     if setup.overlap:

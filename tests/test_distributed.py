@@ -16,6 +16,7 @@ SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
 SCRIPTS = [
     "dist_aggregate_oracle.py",
     "dist_commplan_equivalence.py",
+    "dist_ef_convergence.py",
     "dist_equivalence.py",
     "dist_fault_tolerance.py",
     "dist_overlap_equivalence.py",

@@ -65,11 +65,12 @@ def test_spec_hash_stability():
     b = ExperimentSpec(workload="resnet50", method="signsgd", workers=8)
     assert a.spec_hash() == b.spec_hash()
     assert a.spec_hash() != dataclasses.replace(a, workers=16).spec_hash()
-    # wire-format rev 4: the ``comm`` knob (CommPlan kind) joined the
-    # spec (rev 3 added ``zero1``/``accum``, rev 2 ``overlap``); old
-    # stored rows still load via from_json defaults, but hashes
+    # wire-format rev 5: ``scheme``/``error_feedback`` (the adaptive
+    # controller + ef: axis, repro.adaptive) joined the spec (rev 4
+    # added ``comm``, rev 3 ``zero1``/``accum``, rev 2 ``overlap``);
+    # old stored rows still load via from_json defaults, but hashes
     # intentionally moved.
-    assert a.spec_hash() == "b86cabb9d66e7911", a.spec_hash()
+    assert a.spec_hash() == "0d597e9a3e24e965", a.spec_hash()
 
 
 def test_paper_matrix_size_and_uniqueness():
@@ -323,6 +324,48 @@ def test_headline_small_minority_of_wins():
     # largest model; MSTop-K and SignSGD (all-gather schemes) never win
     assert all(w["setup"].startswith("bert-base/powersgd")
                for w in h["winners"])
+    # the winners table names the collective schedule each win rode
+    # (ROADMAP comm column): PowerSGD is associative -> ring all-reduce
+    assert all(w["comm"] == "allreduce" for w in h["winners"])
+
+
+def test_headline_adaptive_row_wins_or_ties_best_static():
+    """ISSUE 7 acceptance: one adaptive-controller cell per (workload, p)
+    setup of the matrix, accounted in the separate ``adaptive`` headline
+    row — it must win-or-tie the best static scheme in EVERY setup (the
+    controller picks from {overlapped syncSGD} ∪ the static candidates,
+    so losing one would mean the pricing diverged from the static cells)
+    and its win-rate vs syncSGD must be >= the static minority rate."""
+    results = Runner(AnalyticBackend()).run(
+        list(Grid.paper_matrix()) + list(Grid.adaptive_matrix()))
+    h = headline(results)
+    # the static accounting is untouched by the adaptive cells
+    assert h["setups"] == 216 and 1 <= h["wins"] <= 0.10 * h["setups"]
+    a = h["adaptive"]
+    assert a["errors"] == 0 and a["setups"] == len(Grid.adaptive_matrix())
+    ties, comparable = map(int, a["ties_or_beats_static"].split("/"))
+    assert comparable == a["setups"] and ties == comparable, a
+    assert a["win_rate"] >= h["win_rate"], a
+    assert all(ok for _, _, _, ok in headline_verdicts(h))
+
+
+def test_adaptive_spec_axis_round_trips():
+    """Wire rev 5: ``scheme``/``error_feedback`` round-trip, reshuffle
+    the hash, and pre-rev-5 stored rows load with the static defaults."""
+    spec = ExperimentSpec(workload="resnet50", method="adaptive",
+                          scheme="adaptive", workers=64)
+    back = ExperimentSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    assert back == spec and back.is_adaptive
+    assert spec.spec_hash() != dataclasses.replace(
+        spec, scheme="static").spec_hash()
+    ef = ExperimentSpec(workload="resnet50", method="randomk",
+                        workers=64, error_feedback=True)
+    assert ef.spec_hash() != dataclasses.replace(
+        ef, error_feedback=False).spec_hash()
+    old = spec.to_json()
+    del old["scheme"], old["error_feedback"]
+    loaded = ExperimentSpec.from_json(old)
+    assert loaded.scheme == "static" and loaded.error_feedback is False
 
 
 def test_measured_backend_dryrun_missing_artifact(tmp_path):

@@ -289,6 +289,60 @@ if HAVE_HYPOTHESIS:
         _check_plan_bytes_round_trip(n, p, congestion)
 
 
+# ------------------------------------------------- error feedback (ef:)
+def _check_ef_none_is_identity(n: int, kind: str, seed: int,
+                               steps: int = 2):
+    """The ISSUE-7 satellite property: wrapping the identity compressor
+    in error feedback (``ef:none``, repro.adaptive.feedback) is a no-op —
+    after every step the residual is EXACTLY zero and the applied update
+    is bitwise-equal to the plain aggregated gradient — under every legal
+    CommPlan, compared like-for-like (both sides ride the same plan)."""
+    from repro.parallel import commplan as cp
+    plain = cbase.make("none")
+    wrapped = cbase.make("ef:none")
+    plan = cp.CommPlan(kind) if kind != "auto" else None
+    if plan is not None:
+        assert plan.legal_for(wrapped.associative)
+    mesh = make_mesh((1,), ("data",))
+    st_w = wrapped.init_state(n, jax.random.key(seed))
+    st_w_spec = jax.tree.map(lambda _: P(), st_w)
+    st_p = plain.init_state(n, jax.random.key(seed))
+    st_p_spec = jax.tree.map(lambda _: P(), st_p)
+    for i in range(steps):
+        g = jax.random.normal(jax.random.key(seed + i), (n,))
+        f_w = shard_map(
+            lambda b, s: wrapped.aggregate(b, s, ("data",), plan),
+            mesh, in_specs=(P(None), st_w_spec),
+            out_specs=(P(None), st_w_spec))
+        f_p = shard_map(
+            lambda b, s: plain.aggregate(b, s, ("data",), plan),
+            mesh, in_specs=(P(None), st_p_spec),
+            out_specs=(P(None), st_p_spec))
+        out_w, st_w = f_w(g, st_w)
+        out_p, st_p = f_p(g, st_p)
+        np.testing.assert_array_equal(np.asarray(out_w), np.asarray(out_p))
+        assert not np.asarray(st_w.residual).any(), \
+            f"ef:none residual must stay exactly zero (plan {kind!r})"
+
+
+def test_ef_none_identity_fixed_point():
+    """One pinned instance per legal plan (runs without hypothesis)."""
+    from repro.parallel import commplan as cp
+    for kind in cp.KINDS + ("auto",):
+        _check_ef_none_is_identity(n=257, kind=kind, seed=3)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(n=hst.integers(min_value=8, max_value=2048),
+           kind=hst.sampled_from(("allreduce", "reduce_scatter_allgather",
+                                  "reduce_to_owner_broadcast", "gather_all",
+                                  "hierarchical", "auto")),
+           seed=hst.integers(min_value=0, max_value=2 ** 16))
+    def test_ef_none_identity_every_legal_plan(n, kind, seed):
+        _check_ef_none_is_identity(n, kind, seed)
+
+
 # ------------------------------------------------------------ matrix_shape
 @pytest.mark.parametrize("n", [1, 2, 3, 5, 16, 127, 128, 129, 1000, 4096,
                                1 << 20])
