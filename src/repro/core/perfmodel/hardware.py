@@ -59,4 +59,20 @@ TPU_V5E = Hardware(
     dcn_bw=3.125e9,            # inter-pod DCN per chip (25 GB/s per 8-chip host)
 )
 
-PRESETS = {h.name: h for h in (V100_EC2, TPU_V5E)}
+# ---- CPU host (the measured backends' smoke platform) ----
+# Nominal constants only: the REAL values come from
+# ``calibration.calibrate_from_results`` over multi-process pod runs
+# (``MultiProcessBackend``), which replaces alpha/net_bw/dcn_bw with the
+# fitted α–β of this machine's in-process ("ICI") and cross-process gloo
+# ("DCN") tiers.
+CPU_HOST = Hardware(
+    name="cpu-host",
+    peak_flops=5e10,           # order-of-magnitude 1-core AVX fp32
+    hbm_bw=2e10,
+    net_bw=2e9,                # in-process fake-device tier (memcpy)
+    alpha=50e-6,               # dispatch latency per hop
+    allgather_congestion=1.0,
+    dcn_bw=5e8,                # cross-process gloo over loopback
+)
+
+PRESETS = {h.name: h for h in (V100_EC2, TPU_V5E, CPU_HOST)}

@@ -8,7 +8,9 @@ and resumes sweeps by spec hash.  See docs/experiments_api.md.
 from repro.experiments.backend import (AnalyticBackend, Backend,  # noqa: F401
                                        MeasuredBackend, Result,
                                        live_method_id,
-                                       make_live_compressor)
+                                       make_live_compressor,
+                                       run_subprocess_json)
+from repro.experiments.multiproc import MultiProcessBackend  # noqa: F401
 from repro.experiments.report import (headline, headline_rows,  # noqa: F401
                                       headline_verdicts)
 from repro.experiments.runner import ResultStore, Runner  # noqa: F401

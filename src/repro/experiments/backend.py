@@ -277,6 +277,91 @@ def live_method_id(name: str, **kw: Any) -> str:
 
 
 # ---------------------------------------------------------------------------
+# subprocess plumbing (shared by MeasuredBackend and MultiProcessBackend)
+# ---------------------------------------------------------------------------
+def _tail(s, n: int = 800) -> str:
+    """Last n chars of possibly-None/bytes subprocess output."""
+    if s is None:
+        return ""
+    if isinstance(s, bytes):
+        s = s.decode(errors="replace")
+    return s[-n:]
+
+
+def parse_last_json_line(stdout: str) -> dict:
+    """The measured-bench stdout protocol: the LAST non-empty stdout line
+    is one JSON object.  Raises ``ValueError`` on empty/garbage/truncated
+    output (callers turn that into a first-class error Result)."""
+    lines = [ln for ln in (stdout or "").strip().splitlines() if ln.strip()]
+    if not lines:
+        raise ValueError("no stdout")
+    try:
+        rec = json.loads(lines[-1])
+    except json.JSONDecodeError as e:
+        raise ValueError(f"last stdout line is not JSON ({e}): "
+                         f"{lines[-1][:200]!r}")
+    if not isinstance(rec, dict):
+        raise ValueError(f"JSON record is {type(rec).__name__}, not object")
+    return rec
+
+
+def run_subprocess_json(cmd: list, env: Optional[dict] = None,
+                        timeout: float = 1800):
+    """Run ``cmd`` and parse its last stdout line as a JSON record.
+
+    Returns ``(record, None)`` on success, ``(None, error_str)`` on ANY
+    failure — nonzero exit, garbage/truncated stdout JSON, and timeout
+    each come back as a string with the captured stderr tail attached, so
+    a sweep never dies mid-flight on one broken subprocess (the Backend
+    "never raise" contract)."""
+    import subprocess
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+    except subprocess.TimeoutExpired as e:
+        return None, (f"timeout after {timeout:g}s: "
+                      f"stderr: {_tail(e.stderr)}")
+    if proc.returncode != 0:
+        return None, f"rc={proc.returncode}: {_tail(proc.stderr)}"
+    try:
+        return parse_last_json_line(proc.stdout), None
+    except ValueError as e:
+        return None, f"bad stdout JSON: {e}; stderr: {_tail(proc.stderr)}"
+
+
+def live_plan_args(method: str) -> tuple[str, list]:
+    """Map a ``live:<name>[:k=v...]`` method id onto the measured-bench
+    CLI: the compressor name plus ``--plan field=value`` overrides (live
+    kwargs like ``rank=8`` must reach the bench's ParallelPlan or the
+    subprocess would silently measure the default-parameter compressor
+    under this spec's hash).  Raises ``ValueError`` for kwargs with no
+    ParallelPlan field."""
+    from repro.core.compression import base as cbase
+    name, kw = parse_live_method(method)
+    inner = name[3:] if name.startswith("ef:") else name
+    field_of = dict(cbase.registry()[inner].plan_fields)
+    args: list = []
+    for k, v in kw.items():
+        if k not in field_of:
+            raise ValueError(
+                f"live kwarg {k!r} of {method} has no ParallelPlan "
+                f"field; mappable: {sorted(field_of)}")
+        args += ["--plan", f"{field_of[k]}={v}"]
+    return name, args
+
+
+def repro_pythonpath_env() -> dict:
+    """os.environ with this repo's ``src`` prepended to PYTHONPATH, so a
+    spawned ``python -m repro...`` resolves the same code under test."""
+    import repro
+    env = dict(os.environ)
+    # repro may be a namespace package (__file__ None): use __path__
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+# ---------------------------------------------------------------------------
 # measured
 # ---------------------------------------------------------------------------
 class MeasuredBackend:
@@ -303,12 +388,14 @@ class MeasuredBackend:
     def __init__(self, reps: int = 5, warmup: int = 2,
                  art_dir: Optional[str] = None,
                  compile_missing: bool = False,
-                 reuse_artifacts: bool = True):
+                 reuse_artifacts: bool = True,
+                 subprocess_timeout: float = 1800):
         self.reps = reps
         self.warmup = warmup
         self.art_dir = art_dir
         self.compile_missing = compile_missing
         self.reuse_artifacts = reuse_artifacts
+        self.subprocess_timeout = subprocess_timeout
 
     def run(self, spec: ExperimentSpec) -> Result:
         try:
@@ -328,10 +415,8 @@ class MeasuredBackend:
         jax initializes, which cannot happen in this process).  Returns
         the measured step times of the serial, overlapped, and unfused
         schedules for the spec's (workload arch × method × workers)."""
-        import subprocess
         import sys
 
-        import repro
         method = spec.method
         plan_args: list[str] = []
         adaptive_choice = None
@@ -348,20 +433,12 @@ class MeasuredBackend:
             adaptive_choice = decision.scheme
             method = "none" if decision.is_baseline else decision.scheme
         if method.startswith("live:"):
-            # live kwargs (rank=8, bits=4, ...) must reach the bench's
-            # ParallelPlan or the subprocess would silently measure the
-            # default-parameter compressor under this spec's hash
-            from repro.core.compression import base as cbase
-            method, kw = parse_live_method(method)
-            inner = method[3:] if method.startswith("ef:") else method
-            field_of = dict(cbase.registry()[inner].plan_fields)
-            for k, v in kw.items():
-                if k not in field_of:
-                    return Result(spec, self.name, status="error",
-                                  error=f"live kwarg {k!r} of {spec.method}"
-                                        f" has no ParallelPlan field; "
-                                        f"mappable: {sorted(field_of)}")
-                plan_args += ["--plan", f"{field_of[k]}={v}"]
+            try:
+                method, extra = live_plan_args(method)
+            except ValueError as e:
+                return Result(spec, self.name, status="error",
+                              error=str(e))
+            plan_args += extra
         if method in ("syncsgd",):
             method = "none"
         if spec.zero1:
@@ -379,17 +456,11 @@ class MeasuredBackend:
                "--arch", spec.workload, "--devices",
                str(spec.workers or 4), "--method", method,
                "--batch", str(spec.batch), "--json"] + plan_args
-        env = dict(os.environ)
-        # repro may be a namespace package (__file__ None): use __path__
-        src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
-        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-        proc = subprocess.run(cmd, capture_output=True, text=True,
-                              timeout=1800, env=env)
-        if proc.returncode != 0:
+        rec, err = run_subprocess_json(cmd, env=repro_pythonpath_env(),
+                                       timeout=self.subprocess_timeout)
+        if err is not None:
             return Result(spec, self.name, status="error",
-                          error=f"overlap_bench rc={proc.returncode}: "
-                                f"{proc.stderr[-800:]}")
-        rec = json.loads(proc.stdout.strip().splitlines()[-1])
+                          error=f"overlap_bench {err}")
         if adaptive_choice is not None:
             rec["adaptive_choice"] = adaptive_choice
         return Result(spec, self.name, metrics=rec)

@@ -1,0 +1,139 @@
+"""MultiProcessBackend: measured cells on a real multi-process pod.
+
+The sim-to-real step (ROADMAP): every other measured cell runs one
+process, so collectives are in-process XLA no-ops or shared-memory rings.
+This backend launches ``spec.procs >= 2`` OS processes of
+``repro.train.pod_worker``, each a member of one ``jax.distributed`` pod
+(gloo CPU collectives over loopback), forming a genuine two-tier
+(pod × data) mesh — cross-process traffic is the measured slow tier, the
+first real stage separation a ``hierarchical`` CommPlan has ever run on
+in this repo.
+
+Inherits ``MeasuredBackend``: specs without ``procs >= 2`` fall through
+to the historic in-process paths, so one backend sweeps mixed
+in-process + pod grids.  Failure paths are first-class ``Result`` rows
+(nonzero exit / garbage JSON / timeout -> ``status="error"`` with the
+failing process's stderr tail), never an exception mid-sweep.
+
+The measured record feeds ``perfmodel.calibration.calibrate_from_results``
+(α/β fit over pod observations) and the ``report.headline()``
+model-vs-measured error column — see docs/measured_backend.md.
+"""
+from __future__ import annotations
+
+import socket
+import subprocess
+import sys
+from typing import Optional
+
+from repro.experiments.backend import (MeasuredBackend, Result, _tail,
+                                       live_plan_args,
+                                       parse_last_json_line,
+                                       repro_pythonpath_env)
+from repro.experiments.spec import ExperimentSpec
+
+
+def _free_port() -> int:
+    """An OS-assigned free TCP port for the pod coordinator (small race
+    window between close and bind is acceptable for a local smoke pod)."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+class MultiProcessBackend(MeasuredBackend):
+    """``MeasuredBackend`` that runs ``kind="train"``, ``procs >= 2``
+    specs on a real ``jax.distributed`` pod of subprocesses."""
+    name = "multiproc"
+
+    def __init__(self, reps: int = 5, warmup: int = 2,
+                 pod_timeout: float = 900, **kw):
+        super().__init__(reps=reps, warmup=warmup, **kw)
+        self.pod_timeout = pod_timeout
+
+    def run(self, spec: ExperimentSpec) -> Result:
+        if spec.kind == "train" and spec.procs >= 2:
+            try:
+                return self._pod(spec)
+            except Exception as e:  # never raise mid-sweep
+                return Result(spec, self.name, status="error",
+                              error=f"{type(e).__name__}: {e}")
+        return super().run(spec)
+
+    # ------------------------------------------------------------------
+    def _pod_cmds(self, spec: ExperimentSpec, port: int) -> list[list]:
+        """One pod_worker argv per process (test seam: failure-path tests
+        substitute these with canned commands)."""
+        procs = spec.procs
+        workers = spec.workers or procs
+        local, rem = divmod(workers, procs)
+        if local < 1 or rem:
+            raise ValueError(
+                f"workers={workers} does not split over procs={procs} "
+                f"(need workers = procs × local_devices)")
+        method, plan_args = spec.method, []
+        if spec.is_baseline:
+            method = "none"
+        elif method.startswith("live:"):
+            method, plan_args = live_plan_args(method)
+        common = ["--procs", str(procs),
+                  "--coordinator", f"127.0.0.1:{port}",
+                  "--local-devices", str(local),
+                  "--arch", spec.workload, "--method", method,
+                  "--batch", str(spec.batch),
+                  "--reps", str(self.reps),
+                  "--warmup", str(self.warmup), "--json"] + plan_args
+        if spec.zero1:
+            common += ["--zero1"]
+        if spec.accum > 1:
+            common += ["--accum", str(spec.accum)]
+        if spec.comm != "auto":
+            common += ["--comm", spec.comm]
+        for k, v in spec.overrides:
+            common += ["--plan", f"{k}={v}"]
+        return [[sys.executable, "-m", "repro.train.pod_worker",
+                 "--proc-id", str(i)] + common for i in range(procs)]
+
+    def _pod(self, spec: ExperimentSpec) -> Result:
+        cmds = self._pod_cmds(spec, _free_port())
+        env = repro_pythonpath_env()
+        procs = [subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                  stderr=subprocess.PIPE, text=True,
+                                  env=env)
+                 for cmd in cmds]
+        outs: list[tuple[int, str, str]] = []
+        timed_out: Optional[int] = None
+        for i, p in enumerate(procs):
+            try:
+                out, err = p.communicate(timeout=self.pod_timeout)
+            except subprocess.TimeoutExpired as e:
+                # one hung member wedges the whole pod: kill everyone,
+                # report the first timeout with whatever stderr it wrote
+                timed_out = i
+                for q in procs:
+                    if q.poll() is None:
+                        q.kill()
+                out, err = p.communicate()
+                outs.append((p.returncode, out or _tail(e.stdout),
+                             err or _tail(e.stderr)))
+                break
+            outs.append((p.returncode, out, err))
+        if timed_out is not None:
+            _, _, err = outs[-1]
+            return Result(spec, self.name, status="error",
+                          error=f"pod_worker {timed_out} timeout after "
+                                f"{self.pod_timeout:g}s: stderr: "
+                                f"{_tail(err)}")
+        for i, (rc, _, err) in enumerate(outs):
+            if rc != 0:
+                return Result(spec, self.name, status="error",
+                              error=f"pod_worker {i} rc={rc}: "
+                                    f"{_tail(err)}")
+        out0, err0 = outs[0][1], outs[0][2]
+        try:
+            rec = parse_last_json_line(out0)
+        except ValueError as e:
+            return Result(spec, self.name, status="error",
+                          error=f"pod_worker 0 bad stdout JSON: {e}; "
+                                f"stderr: {_tail(err0)}")
+        return Result(spec, self.name, metrics=rec)

@@ -41,6 +41,14 @@ def headline(results: Iterable[Result]) -> dict:
     same matrix.  Per (workload, p, batch, comm) cell the adaptive time
     is also compared against the best static method's time —
     ``ties_or_beats_static`` counts the cells where it wins-or-ties.
+
+    Cells carrying the pod-calibration columns
+    (``perfmodel.calibration.attach_model_error`` — measured
+    multi-process runs with a fitted α–β prediction) are surfaced in a
+    ``measured`` block with a model-vs-measured relative-error column
+    per cell (positive = the model over-predicts): the analytic verdict's
+    empirical error bar.  Baseline pod cells are included — the error
+    column is about the model, not about wins.
     """
     total = wins = errors = 0
     by_method: dict[str, list[int]] = {}
@@ -48,7 +56,17 @@ def headline(results: Iterable[Result]) -> dict:
     adaptive_cells: dict[tuple, float] = {}
     a_wins = a_errors = 0
     best_static: dict[tuple, float] = {}
+    measured_cells = []
     for r in results:
+        if r.ok and "model_rel_err" in r.metrics:
+            # collected BEFORE the baseline skip: pod syncSGD cells are
+            # exactly where the model needs its error bar
+            measured_cells.append(dict(
+                setup=r.spec.label(),
+                comm=r.metrics.get("comm", r.spec.comm),
+                t_measured_ms=round(r.metrics["t_measured_s"] * 1e3, 3),
+                t_model_ms=round(r.metrics["t_model_s"] * 1e3, 3),
+                model_rel_err=round(r.metrics["model_rel_err"], 4)))
         if r.spec.is_baseline:
             continue
         if r.spec.is_adaptive:
@@ -92,6 +110,11 @@ def headline(results: Iterable[Result]) -> dict:
             setups=n, wins=a_wins, errors=a_errors,
             win_rate=(a_wins / n) if n else 0.0,
             ties_or_beats_static=f"{ties}/{len(comparable)}")
+    if measured_cells:
+        out["measured"] = dict(
+            cells=measured_cells,
+            max_abs_rel_err=round(max(abs(c["model_rel_err"])
+                                      for c in measured_cells), 4))
     return out
 
 
@@ -110,11 +133,14 @@ def headline_rows(results: Sequence[Result]) -> list[dict]:
 
 
 def headline_verdicts(h: dict,
-                      max_win_rate: float = HEADLINE_MAX_WIN_RATE):
+                      max_win_rate: float = HEADLINE_MAX_WIN_RATE,
+                      max_model_err: float = 0.5):
     """Anchor checks in the ``paper_figures`` (claim, got, want, ok)
     format: the matrix is big enough, nothing errored, and compression
     wins in only a small minority of setups — with at least one win, so
-    the check cannot pass vacuously."""
+    the check cannot pass vacuously.  When the sweep carries measured pod
+    cells (``h["measured"]``), the calibrated model must track them
+    within ``max_model_err`` relative error."""
     out = [
         ("matrix size >= 200 setups", str(h["setups"]), ">= 200",
          h["setups"] >= 200),
@@ -140,4 +166,12 @@ def headline_verdicts(h: dict,
              f"{a['win_rate']:.1%} vs {h['win_rate']:.1%}",
              ">= static", a["win_rate"] >= h["win_rate"]),
         ]
+    if "measured" in h:
+        m = h["measured"]
+        out.append(
+            ("calibrated model tracks measured pod cells",
+             f"max |rel err| = {m['max_abs_rel_err']:.1%} "
+             f"over {len(m['cells'])} cells",
+             f"<= {max_model_err:.0%}",
+             m["max_abs_rel_err"] <= max_model_err))
     return out

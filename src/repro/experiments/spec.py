@@ -99,6 +99,15 @@ class ExperimentSpec:
                     (``repro.adaptive.feedback``); descriptive for named
                     paper methods, which already carry EF where the
                     original scheme does.  Wire-format rev 5.
+      ``procs``     OS processes of the measured pod (0 = in-process, the
+                    historic single-process backends).  ``procs >= 2``
+                    makes a ``kind="train"`` cell a real
+                    ``jax.distributed`` pod: the ``MultiProcessBackend``
+                    launches ``procs`` worker processes, each with
+                    ``workers // procs`` local devices, on a two-tier
+                    (pod × data) mesh — the pod axis crosses process
+                    boundaries (the measured "DCN" tier).  Wire-format
+                    rev 6.
 
     Inline overrides (None/0 = resolve from the calibration registry):
       workload: ``model_bytes``, ``t_comp_s``;
@@ -124,6 +133,7 @@ class ExperimentSpec:
     comm: str = "auto"
     scheme: str = "static"
     error_feedback: bool = False
+    procs: int = 0
     # -- inline workload parameters (0.0 = resolve by name) --
     model_bytes: float = 0.0
     t_comp_s: float = 0.0
@@ -190,6 +200,8 @@ class ExperimentSpec:
         """Short human-readable identity for logs and BENCH rows."""
         parts = [self.workload, self.method, f"p{self.workers}",
                  f"b{self.batch}"]
+        if self.procs:
+            parts.append(f"procs{self.procs}")
         if self.variant:
             parts.append(self.variant)
         return "/".join(parts)

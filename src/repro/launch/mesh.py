@@ -25,3 +25,31 @@ def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
 def make_local_mesh():
     """Single-device mesh (CPU examples)."""
     return _mk((1, 1), ("data", "model"))
+
+
+def make_pod_mesh(procs: int | None = None, local: int | None = None,
+                  tp: int = 1):
+    """Two-tier (pod × data × model) mesh over a LIVE ``jax.distributed``
+    pod: the leading "pod" axis spans OS processes (its links cross
+    process boundaries — the measured DCN tier), "data" spans each
+    process's local devices (the fast in-process tier).
+
+    Requires ``jax.distributed.initialize`` to have run; ``jax.devices()``
+    orders devices by process index, so the plain reshape puts each
+    process's local devices in one pod row.  Defaults read the live
+    topology (``jax.process_count()`` × local device count).
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    procs = procs or jax.process_count()
+    if local is None:
+        local = jax.device_count() // (procs * tp)
+    devs = np.array(jax.devices())
+    want = procs * local * tp
+    if devs.size != want:
+        raise ValueError(
+            f"pod mesh {procs}×{local}×{tp} needs {want} devices, "
+            f"jax.devices() has {devs.size}")
+    return Mesh(devs.reshape(procs, local, tp), ("pod", "data", "model"))

@@ -15,9 +15,23 @@ def main(argv=None):
     ap.add_argument("--full-size", action="store_true",
                     help="use the full config (default: reduced smoke size)")
     ap.add_argument("--mesh", default="local",
-                    choices=["local", "test", "single", "multi"])
+                    choices=["local", "test", "single", "multi", "pod"])
     ap.add_argument("--devices", type=int, default=0,
                     help="fake-device count for --mesh test")
+    # --mesh pod: one member of a multi-process jax.distributed pod on a
+    # two-tier (pod × data) mesh — launch one copy per --proc-id, same
+    # --procs/--coordinator everywhere (cf. repro.train.pod_worker, the
+    # measured-cell variant of the same flow)
+    ap.add_argument("--procs", type=int, default=2,
+                    help="--mesh pod: total processes in the pod")
+    ap.add_argument("--proc-id", type=int, default=0,
+                    help="--mesh pod: this process's index")
+    ap.add_argument("--coordinator", default="127.0.0.1:12355",
+                    help="--mesh pod: jax.distributed coordinator "
+                         "host:port (process 0 binds it)")
+    ap.add_argument("--local-devices", type=int, default=2,
+                    help="--mesh pod: forced host devices per process "
+                         "(the 'data' axis; 'pod' spans processes)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -51,6 +65,11 @@ def main(argv=None):
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}")
+    if args.mesh == "pod":
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count="
+              f"{args.local_devices}")
     if args.overlap or args.adaptive:
         # latency-hiding-scheduler flags must precede jax init (TPU only);
         # adaptive resolves to an overlapped plan even on fallback
@@ -59,6 +78,12 @@ def main(argv=None):
 
     import jax
     import jax.numpy as jnp
+
+    if args.mesh == "pod":
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        jax.distributed.initialize(coordinator_address=args.coordinator,
+                                   num_processes=args.procs,
+                                   process_id=args.proc_id)
 
     from repro.configs import base as cfgs
     from repro.data.pipeline import Pipeline
@@ -73,6 +98,8 @@ def main(argv=None):
         arch = cfgs.reduced(arch)
     if args.mesh == "local":
         mesh = mesh_mod.make_local_mesh()
+    elif args.mesh == "pod":
+        mesh = mesh_mod.make_pod_mesh(args.procs, args.local_devices)
     elif args.mesh == "test":
         n = len(jax.devices())
         assert n >= 8, "use --devices 8 (or more) with --mesh test"
@@ -127,6 +154,27 @@ def main(argv=None):
 
     data = Pipeline(DataConfig(vocab=arch.vocab, seq_len=args.seq,
                                global_batch=args.batch, seed=args.seed))
+    if args.mesh == "pod":
+        # the synthetic pipeline is seeded-deterministic, so every process
+        # holds the identical global host batch; lift it to global arrays
+        # sharded over the pod mesh before it reaches the jitted step
+        import numpy as np
+        from jax.sharding import NamedSharding
+
+        class _GlobalBatches:
+            def __init__(self, inner, setup):
+                self.inner, self.setup = inner, setup
+                self._specs_fn = ts.make_batch_specs(setup)
+
+            def __iter__(self):
+                for b in self.inner:
+                    specs = self._specs_fn(b)
+                    yield {k: jax.make_array_from_process_local_data(
+                               NamedSharding(self.setup.mesh, specs[k]),
+                               np.asarray(v))
+                           for k, v in b.items()}
+
+        data = _GlobalBatches(data, setup)
     tcfg = TrainerConfig(
         total_steps=args.steps, log_every=args.log_every,
         ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,

@@ -137,6 +137,29 @@ class CommPlan:
                 f"the payload is non-associative (paper Table 3): only "
                 f"'gather_all' (or 'auto') can move it")
 
+    def validate_axes(self, axes: Sequence[str]) -> None:
+        """Hierarchical plans must split a non-empty reduction into a
+        non-empty INNER stage: ``intra`` naming no axis of the actual
+        reduction means the whole mean would silently run as a
+        single-stage ring over the slow tier — on a real two-tier pod
+        mesh that is a misconfigured plan, not a degenerate split
+        (``tests/test_multiproc.py`` pins the error).  Intra axes absent
+        from the reduction are still ignored (one plan serves meshes
+        with and without a pod axis) as long as at least one is present.
+        """
+        if self.kind != "hierarchical":
+            return
+        axes = tuple(axes)
+        if not axes:
+            return
+        if not any(a in self.intra for a in axes):
+            raise CommPlanError(
+                f"hierarchical comm plan intra={self.intra} names no axis "
+                f"of the reduction over {axes}: the intra (fast-tier) "
+                f"stage would be empty and the whole payload would ride "
+                f"the slow tier — name at least one reduction axis, e.g. "
+                f"comm='hierarchical:{axes[-1]}'")
+
     def resolve(self, associative: bool) -> "CommPlan":
         """Concrete plan for a payload: ``auto`` resolves to the historic
         dispatch; everything else validates and returns itself."""
@@ -270,6 +293,7 @@ def mean_reduce(t: jax.Array, axes: Sequence[str], plan: CommPlan,
     axes = tuple(axes)
     if not axes:
         return t
+    plan.validate_axes(axes)
     kind = plan.resolve(associative=True).kind
     if kind == "allreduce":
         return jax.lax.pmean(t, axes)

@@ -32,6 +32,34 @@ import sys
 import time
 
 
+def timed_interleaved(setup, batch, builders: dict, reps: int,
+                      warmup: int) -> dict:
+    """Min-of-reps per-step wall time (s) per schedule, measured
+    ROUND-ROBIN (one step of each schedule per rep) so machine-load
+    drift hits every schedule equally; min discards contention spikes.
+    Each schedule threads its own state so donation stays realistic.
+
+    Shared by this bench and ``repro.train.pod_worker`` (the multi-process
+    pod measurement) — jax must already be initialized by the caller."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.train import train_step as ts
+
+    runs = {k: [ts.init_state(setup, jax.random.key(0)), b(batch), []]
+            for k, b in builders.items()}
+    for i in range(warmup + reps):
+        for k, run in runs.items():
+            state, step, times = run
+            t0 = time.perf_counter()
+            state, m = step(state, batch, jnp.float32(1e-3))
+            jax.block_until_ready(m["loss"])
+            run[0] = state
+            if i >= warmup:
+                times.append(time.perf_counter() - t0)
+    return {k: min(run[2]) for k, run in runs.items()}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -106,25 +134,6 @@ def main(argv=None) -> None:
                                global_batch=args.batch), prefetch=0)
     batch = next(iter(data))
 
-    def timed_interleaved(builders: dict) -> dict:
-        """Min-of-reps per-step wall time (s) per schedule, measured
-        ROUND-ROBIN (one step of each schedule per rep) so machine-load
-        drift hits every schedule equally; min discards contention
-        spikes.  Each schedule threads its own state so donation stays
-        realistic."""
-        runs = {k: [ts.init_state(setup, jax.random.key(0)), b(batch), []]
-                for k, b in builders.items()}
-        for i in range(args.warmup + args.reps):
-            for k, run in runs.items():
-                state, step, times = run
-                t0 = time.perf_counter()
-                state, m = step(state, batch, jnp.float32(1e-3))
-                jax.block_until_ready(m["loss"])
-                run[0] = state
-                if i >= args.warmup:
-                    times.append(time.perf_counter() - t0)
-        return {k: min(run[2]) for k, run in runs.items()}
-
     builders = {
         "serial": overlap.make_step(setup, "serial", accum=args.accum),
         "overlap": overlap.make_step(setup, "overlap", accum=args.accum),
@@ -132,7 +141,7 @@ def main(argv=None) -> None:
     if args.accum == 1:
         # the two-dispatch strawman has no accumulated variant
         builders["unfused"] = overlap.make_unfused_step(setup)
-    t = timed_interleaved(builders)
+    t = timed_interleaved(setup, batch, builders, args.reps, args.warmup)
     t_serial, t_overlap = t["serial"], t["overlap"]
 
     rec = dict(

@@ -185,6 +185,9 @@ def build(arch: ArchConfig, mesh: Mesh,
                                 if sizes.get(a, 1) > 1),
             raw_axes=tuple(a for a in agg_cfg.raw_axes
                            if sizes.get(a, 1) > 1))
+    # fail at build time (not mid-step on a live pod) when a hierarchical
+    # plan's intra stage would be empty over the actual reduction axes
+    agg_cfg.comm.validate_axes(agg_cfg.raw_axes + agg_cfg.compress_axes)
     ocfg = opt_cfg or opt_mod.OptConfig(name=plan.optimizer)
     setup = TrainSetup(arch=arch, mesh=mesh, model=Model(arch), ctx=ctx,
                        dp_axes=dp_axes, fsdp_axes=fsdp_axes,

@@ -9,10 +9,9 @@ device.  The shard_map result must match the simulation bitwise-close for
 all registered compressors — this pins the mesh collectives to the payload
 semantics the wire spec declares.
 """
-import os
+import harness
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=4")
+harness.setup_devices(4)
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -124,8 +123,7 @@ def main():
                                            rtol=1e-5, atol=1e-5,
                                            err_msg=f"{comp.name} state[{i}]")
         print(f"  {comp.name}: mesh == host simulation on {N_DEV} devices")
-    print("OK dist_aggregate_oracle")
 
 
 if __name__ == "__main__":
-    main()
+    harness.run_main("dist_aggregate_oracle", main)

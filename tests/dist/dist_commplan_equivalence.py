@@ -22,10 +22,9 @@ pins the equivalence contract:
     into the sharded update + params on the broadcast leg) matches the
     allreduce+gather ZeRO-1 trajectory.
 """
-import os
+import harness
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=4")
+harness.setup_devices(4)
 
 import dataclasses  # noqa: E402
 
@@ -34,14 +33,10 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.configs import base  # noqa: E402
 from repro.core import aggregator as agg_mod  # noqa: E402
-from repro.data.pipeline import Pipeline  # noqa: E402
-from repro.data.synthetic import DataConfig  # noqa: E402
 from repro.parallel import commplan as cp  # noqa: E402
 from repro.parallel.compat import make_mesh, shard_map  # noqa: E402
 from repro.train import overlap  # noqa: E402
-from repro.train import train_step as ts  # noqa: E402
 
 STEPS = 3
 N = 5003   # deliberately not divisible by 4: exercises the rs+ag padding
@@ -106,61 +101,30 @@ def aggregator_equivalence():
 # --------------------------------------------------------------------------
 # train level
 # --------------------------------------------------------------------------
-def build_setup(comm="auto", method="none", zero1=False, mesh=None,
-                compress_axes="pod"):
-    cfg = base.reduced(base.get("tinyllama-1.1b"))
-    cfg = dataclasses.replace(cfg, vocab=64, plan=dataclasses.replace(
-        cfg.plan, bucket_mb=1, zero1=zero1, overlap=True,
-        compression=method, comm=comm, compress_axes=compress_axes))
-    if mesh is None:
-        mesh = make_mesh((4, 1), ("data", "model"))
-    return ts.build(cfg, mesh)
-
-
-def run(setup, step_builder, batches):
-    state = ts.init_state(setup, jax.random.key(0))
-    step = step_builder(batches[0])
-    ms = []
-    for b in batches:
-        state, m = step(state, b, jnp.float32(1e-3))
-        ms.append(jax.device_get(m))
-    return jax.device_get(state), ms
-
-
-def assert_bit_identical(sa, sb, ma, mb, label):
-    for pa, pb in zip(jax.tree.leaves(sa["params"]),
-                      jax.tree.leaves(sb["params"])):
-        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb),
-                                      err_msg=label)
-    for a, b in zip(ma, mb):
-        for k in a:
-            np.testing.assert_array_equal(np.asarray(a[k]),
-                                          np.asarray(b[k]),
-                                          err_msg=f"{label} metric {k}")
-
-
 def train_equivalence(batches):
     results = {}
     expect_sched = {"allreduce": "overlap",
                     "reduce_scatter_allgather": "overlap",
                     "gather_all": "serial"}
     for comm, want in expect_sched.items():
-        setup = build_setup(comm=comm)
+        setup = harness.build_setup(comm=comm, zero1=False,
+                                    compress_axes="pod")
         assert overlap.effective_schedule(setup) == want, (comm, want)
-        s_ser, m_ser = run(setup, overlap.make_step(setup, "serial"),
-                           batches)
-        s_ovl, m_ovl = run(setup, overlap.make_step(setup, "overlap"),
-                           batches)
-        assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
-                             f"{comm}: serial vs overlap")
+        s_ser, m_ser, _ = harness.run(
+            setup, overlap.make_step(setup, "serial"), batches)
+        s_ovl, m_ovl, _ = harness.run(
+            setup, overlap.make_step(setup, "overlap"), batches)
+        harness.assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
+                                     f"{comm}: serial vs overlap")
         results[comm] = (s_ser, m_ser)
         print(f"  train[{comm}]: serial == overlapped bit-identical "
               f"({STEPS} steps, effective={want})")
 
     ref_s, ref_m = results["allreduce"]
-    assert_bit_identical(ref_s, results["reduce_scatter_allgather"][0],
-                         ref_m, results["reduce_scatter_allgather"][1],
-                         "allreduce vs reduce_scatter_allgather training")
+    harness.assert_bit_identical(
+        ref_s, results["reduce_scatter_allgather"][0],
+        ref_m, results["reduce_scatter_allgather"][1],
+        "allreduce vs reduce_scatter_allgather training")
     print("  train: allreduce == reduce_scatter_allgather bit-identical")
     np.testing.assert_allclose(
         [m["loss"] for m in ref_m],
@@ -172,21 +136,22 @@ def train_equivalence(batches):
 
 def hierarchical_equivalence():
     mesh = make_mesh((2, 2, 1), ("pod", "data", "model"))
-    batches = make_batches()
-    setup_h = build_setup(comm="hierarchical", mesh=mesh,
-                          compress_axes="all")
+    batches = harness.make_batches(STEPS)
+    setup_h = harness.build_setup(comm="hierarchical", zero1=False,
+                                  mesh=mesh, compress_axes="all")
     assert setup_h.agg_cfg.compress_axes == ("pod", "data"), \
         setup_h.agg_cfg
     assert overlap.effective_schedule(setup_h) == "overlap"
-    s_ser, m_ser = run(setup_h, overlap.make_step(setup_h, "serial"),
-                       batches)
-    s_ovl, m_ovl = run(setup_h, overlap.make_step(setup_h, "overlap"),
-                       batches)
-    assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
-                         "hierarchical: serial vs overlap")
-    setup_a = build_setup(comm="allreduce", mesh=mesh,
-                          compress_axes="all")
-    _, m_ar = run(setup_a, overlap.make_step(setup_a, "serial"), batches)
+    s_ser, m_ser, _ = harness.run(
+        setup_h, overlap.make_step(setup_h, "serial"), batches)
+    s_ovl, m_ovl, _ = harness.run(
+        setup_h, overlap.make_step(setup_h, "overlap"), batches)
+    harness.assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
+                                 "hierarchical: serial vs overlap")
+    setup_a = harness.build_setup(comm="allreduce", zero1=False,
+                                  mesh=mesh, compress_axes="all")
+    _, m_ar, _ = harness.run(
+        setup_a, overlap.make_step(setup_a, "serial"), batches)
     np.testing.assert_allclose([m["loss"] for m in m_ser],
                                [m["loss"] for m in m_ar], rtol=1e-4,
                                err_msg="hierarchical vs allreduce (fp)")
@@ -195,16 +160,17 @@ def hierarchical_equivalence():
 
 
 def rtob_equivalence(batches):
-    setup_r = build_setup(comm="reduce_to_owner_broadcast", zero1=True)
+    setup_r = harness.build_setup(comm="reduce_to_owner_broadcast",
+                                  zero1=True, compress_axes="pod")
     assert setup_r.rtob
     # no per-bucket collective to schedule: the step reports "raw"
     assert overlap.effective_schedule(setup_r) == "raw"
-    s_ser, m_ser = run(setup_r, overlap.make_step(setup_r, "serial"),
-                       batches)
-    s_ovl, m_ovl = run(setup_r, overlap.make_step(setup_r, "overlap"),
-                       batches)
-    assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
-                         "rtob: serial vs overlap")
+    s_ser, m_ser, _ = harness.run(
+        setup_r, overlap.make_step(setup_r, "serial"), batches)
+    s_ovl, m_ovl, _ = harness.run(
+        setup_r, overlap.make_step(setup_r, "overlap"), batches)
+    harness.assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
+                                 "rtob: serial vs overlap")
     print(f"  train[zero1+rtob]: serial == overlapped bit-identical "
           f"({STEPS} steps)")
 
@@ -212,8 +178,10 @@ def rtob_equivalence(batches):
     # oracle above proves the reduce bit-identical), but the grad-norm
     # summation order differs (owned-shard psum vs per-leaf tree sum), so
     # trajectories agree to fp tolerance
-    setup_a = build_setup(comm="auto", zero1=True)
-    s_a, m_a = run(setup_a, overlap.make_step(setup_a, "serial"), batches)
+    setup_a = harness.build_setup(comm="auto", zero1=True,
+                                  compress_axes="pod")
+    s_a, m_a, _ = harness.run(
+        setup_a, overlap.make_step(setup_a, "serial"), batches)
     np.testing.assert_allclose([m["loss"] for m in m_ser],
                                [m["loss"] for m in m_a], rtol=2e-2,
                                err_msg="rtob vs allreduce+gather zero1")
@@ -227,21 +195,13 @@ def rtob_equivalence(batches):
           "allreduce+gather ZeRO-1")
 
 
-def make_batches():
-    data = Pipeline(DataConfig(vocab=64, seq_len=32, global_batch=8),
-                    prefetch=0)
-    it = iter(data)
-    return [next(it) for _ in range(STEPS)]
-
-
 def main():
     aggregator_equivalence()
-    batches = make_batches()
+    batches = harness.make_batches(STEPS)
     train_equivalence(batches)
     rtob_equivalence(batches)
     hierarchical_equivalence()
-    print("OK dist_commplan_equivalence")
 
 
 if __name__ == "__main__":
-    main()
+    harness.run_main("dist_commplan_equivalence", main)

@@ -17,10 +17,9 @@ Assertions (constants frozen from the tuning sweep):
   * plain final/mid-loss ratio >= 0.8             (near-flat tail)
   * ef beats plain by >= 20x
 """
-import os
+import harness
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=4")
+harness.setup_devices(4)
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -83,8 +82,7 @@ def main():
     assert plain[-1] >= 0.5 * l0, (plain[-1], l0)
     assert plateau >= 0.8, plateau
     assert plain[-1] / ef[-1] >= 20.0, (plain[-1], ef[-1])
-    print("OK dist_ef_convergence")
 
 
 if __name__ == "__main__":
-    main()
+    harness.run_main("dist_ef_convergence", main)

@@ -19,20 +19,16 @@ differs.  Training results must therefore be bit-identical, for the raw
 (The ZeRO-1 × accum regime matrix has its own oracle:
 tests/dist/dist_zero1_accum.py.)
 """
-import os
+import harness
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=4")
+harness.setup_devices(4)
 
 import dataclasses  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import base  # noqa: E402
-from repro.data.pipeline import Pipeline  # noqa: E402
-from repro.data.synthetic import DataConfig  # noqa: E402
 from repro.parallel.compat import make_mesh  # noqa: E402
 from repro.train import overlap  # noqa: E402
 from repro.train import train_step as ts  # noqa: E402
@@ -41,68 +37,35 @@ STEPS = 3
 METHODS = ["none", "randomk", "signsgd"]
 
 
-def build_setup(method: str):
-    cfg = base.reduced(base.get("tinyllama-1.1b"))
-    cfg = dataclasses.replace(cfg, vocab=64, plan=dataclasses.replace(
-        cfg.plan, bucket_mb=1, zero1=False, overlap=True,
-        compression=method))
-    mesh = make_mesh((4, 1), ("data", "model"))
-    return ts.build(cfg, mesh)
-
-
-def run(setup, step_builder, batches):
-    state = ts.init_state(setup, jax.random.key(0))
-    step = step_builder(batches[0])
-    ms = []
-    for b in batches:
-        state, m = step(state, b, jnp.float32(1e-3))
-        ms.append(jax.device_get(m))
-    return jax.device_get(state), ms
-
-
-def assert_bit_identical(sa, sb, ma, mb, label):
-    for pa, pb in zip(jax.tree.leaves(sa["params"]),
-                      jax.tree.leaves(sb["params"])):
-        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb),
-                                      err_msg=label)
-    for a, b in zip(ma, mb):
-        for k in a:
-            np.testing.assert_array_equal(np.asarray(a[k]),
-                                          np.asarray(b[k]),
-                                          err_msg=f"{label} metric {k}")
-
-
 def main():
-    data = Pipeline(DataConfig(vocab=64, seq_len=32, global_batch=8),
-                    prefetch=0)
-    it = iter(data)
-    batches = [next(it) for _ in range(STEPS)]
+    batches = harness.make_batches(STEPS)
 
     for method in METHODS:
-        setup = build_setup(method)
+        setup = harness.build_setup(method, zero1=False)
         comp_assoc = (method == "none"
                       or setup.agg_cfg.build().associative)
         eff = overlap.effective_schedule(setup)
         assert eff == ("overlap" if comp_assoc else "serial"), (method, eff)
 
-        s_ser, m_ser = run(setup, overlap.make_step(setup, "serial"),
-                           batches)
-        s_ovl, m_ovl = run(setup, overlap.make_step(setup, "overlap"),
-                           batches)
-        assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
-                             f"{method}: serial vs overlapped")
+        s_ser, m_ser, _ = harness.run(
+            setup, overlap.make_step(setup, "serial"), batches)
+        s_ovl, m_ovl, _ = harness.run(
+            setup, overlap.make_step(setup, "overlap"), batches)
+        harness.assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
+                                     f"{method}: serial vs overlapped")
         print(f"  {method}: serial == overlapped bit-identical "
               f"({STEPS} steps, effective={eff})")
 
     # classic scan-based step vs segmented: same math, different XLA
     # program -> fp-tolerance agreement on the training trajectory
-    setup = build_setup("none")
-    s_seg, m_seg = run(setup, overlap.make_step(setup, "serial"), batches)
+    setup = harness.build_setup("none", zero1=False)
+    s_seg, m_seg, _ = harness.run(
+        setup, overlap.make_step(setup, "serial"), batches)
     classic = dataclasses.replace(
         setup.arch, plan=dataclasses.replace(setup.arch.plan,
                                              overlap=False))
     setup_c = ts.build(classic, setup.mesh)
-    s_cls, m_cls = run(setup_c, ts.make_step(setup_c), batches)
+    s_cls, m_cls, _ = harness.run(setup_c, ts.make_step(setup_c), batches)
     for a, b in zip(m_seg, m_cls):
         np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-3,
                                    err_msg="segmented vs classic loss")
@@ -110,7 +73,8 @@ def main():
 
     # the unfused strawman computes the same training step across two
     # dispatches — fp-tolerance agreement
-    s_unf, m_unf = run(setup, overlap.make_unfused_step(setup), batches)
+    s_unf, m_unf, _ = harness.run(setup, overlap.make_unfused_step(setup),
+                                  batches)
     for a, b in zip(m_seg, m_unf):
         np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-4,
                                    err_msg="segmented vs unfused loss")
@@ -119,8 +83,6 @@ def main():
     # enc-dec: two segmented stacks (decoder then encoder) under the
     # arch's default ZeRO-1 plan
     audio_equivalence()
-
-    print("OK dist_overlap_equivalence")
 
 
 def audio_batches():
@@ -145,17 +107,19 @@ def audio_equivalence():
     assert cfg.plan.zero1         # seamless ships ZeRO-1 by default
     mesh = make_mesh((4, 1), ("data", "model"))
     setup = ts.build(cfg, mesh)
-    s_ser, m_ser = run(setup, overlap.make_step(setup, "serial"), batches)
-    s_ovl, m_ovl = run(setup, overlap.make_step(setup, "overlap"), batches)
-    assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
-                         "audio: serial vs overlapped")
+    s_ser, m_ser, _ = harness.run(
+        setup, overlap.make_step(setup, "serial"), batches)
+    s_ovl, m_ovl, _ = harness.run(
+        setup, overlap.make_step(setup, "overlap"), batches)
+    harness.assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl,
+                                 "audio: serial vs overlapped")
     print(f"  audio (enc-dec, zero1): serial == overlapped bit-identical "
           f"({STEPS} steps)")
 
     classic = dataclasses.replace(
         cfg, plan=dataclasses.replace(cfg.plan, overlap=False))
     setup_c = ts.build(classic, mesh)
-    s_cls, m_cls = run(setup_c, ts.make_step(setup_c), batches)
+    s_cls, m_cls, _ = harness.run(setup_c, ts.make_step(setup_c), batches)
     for a, b in zip(m_ser, m_cls):
         np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-3,
                                    err_msg="audio segmented vs classic")
@@ -163,4 +127,4 @@ def audio_equivalence():
 
 
 if __name__ == "__main__":
-    main()
+    harness.run_main("dist_overlap_equivalence", main)

@@ -21,10 +21,9 @@ real 4-way DP axis exercises the cross-rank gather:
   * segmented accum agrees with the classic scan-over-microbatches step
     to fp tolerance.
 """
-import os
+import harness
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=4")
+harness.setup_devices(4)
 
 import dataclasses  # noqa: E402
 
@@ -32,76 +31,40 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.configs import base  # noqa: E402
-from repro.data.pipeline import Pipeline  # noqa: E402
-from repro.data.synthetic import DataConfig  # noqa: E402
-from repro.parallel.compat import make_mesh  # noqa: E402
 from repro.train import overlap  # noqa: E402
 from repro.train import train_step as ts  # noqa: E402
 
 STEPS = 3
 
 
-def build_setup(method="none", zero1=False, param_dtype="float32"):
-    cfg = base.reduced(base.get("tinyllama-1.1b"))
-    cfg = dataclasses.replace(cfg, vocab=64, plan=dataclasses.replace(
-        cfg.plan, bucket_mb=1, zero1=zero1, overlap=True,
-        compression=method, param_dtype=param_dtype))
-    return ts.build(cfg, make_mesh((4, 1), ("data", "model")))
-
-
-def run(setup, step_builder, batches, keep_first_params=False):
-    state = ts.init_state(setup, jax.random.key(0))
-    step = step_builder(batches[0])
-    ms, p1 = [], None
-    for i, b in enumerate(batches):
-        state, m = step(state, b, jnp.float32(1e-3))
-        ms.append(jax.device_get(m))
-        if i == 0 and keep_first_params:
-            p1 = jax.device_get(state["params"])
-    return jax.device_get(state), ms, p1
-
-
-def assert_bit_identical(sa, sb, ma, mb, label):
-    for pa, pb in zip(jax.tree.leaves(sa["params"]),
-                      jax.tree.leaves(sb["params"])):
-        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb),
-                                      err_msg=label)
-    for a, b in zip(ma, mb):
-        for k in a:
-            np.testing.assert_array_equal(np.asarray(a[k]),
-                                          np.asarray(b[k]),
-                                          err_msg=f"{label} metric {k}")
-
-
 def main():
-    data = Pipeline(DataConfig(vocab=64, seq_len=32, global_batch=8),
-                    prefetch=0)
-    it = iter(data)
-    batches = [next(it) for _ in range(STEPS)]
+    batches = harness.make_batches(STEPS)
 
     # ---- serial == overlap, bit-identical, across the regime matrix ----
     for method, zero1, accum in [("none", True, 1), ("randomk", True, 1),
                                  ("none", False, 2), ("randomk", False, 2),
                                  ("randomk", True, 2)]:
-        setup = build_setup(method, zero1=zero1)
-        s_ser, m_ser, _ = run(
+        setup = harness.build_setup(method, zero1=zero1)
+        s_ser, m_ser, _ = harness.run(
             setup, overlap.make_step(setup, "serial", accum=accum), batches)
-        s_ovl, m_ovl, _ = run(
+        s_ovl, m_ovl, _ = harness.run(
             setup, overlap.make_step(setup, "overlap", accum=accum),
             batches)
         label = f"{method}/zero1={zero1}/accum={accum}"
-        assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl, label)
+        harness.assert_bit_identical(s_ser, s_ovl, m_ser, m_ovl, label)
         print(f"  {label}: serial == overlapped bit-identical "
               f"({STEPS} steps)")
 
     # ---- owner-sharded flat AdamW == replicated AdamW -------------------
-    setup_z = build_setup("none", zero1=True)
-    setup_r = build_setup("none", zero1=False, param_dtype="bfloat16")
-    s_z, m_z, p1_z = run(setup_z, overlap.make_step(setup_z, "serial"),
-                         batches, keep_first_params=True)
-    s_r, m_r, p1_r = run(setup_r, overlap.make_step(setup_r, "serial"),
-                         batches, keep_first_params=True)
+    setup_z = harness.build_setup("none", zero1=True)
+    setup_r = harness.build_setup("none", zero1=False,
+                                  param_dtype="bfloat16")
+    s_z, m_z, p1_z = harness.run(setup_z,
+                                 overlap.make_step(setup_z, "serial"),
+                                 batches, keep_first_params=True)
+    s_r, m_r, p1_r = harness.run(setup_r,
+                                 overlap.make_step(setup_r, "serial"),
+                                 batches, keep_first_params=True)
     for a, b in zip(jax.tree.leaves(p1_z), jax.tree.leaves(p1_r)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                       err_msg="zero1 vs replicated step 1")
@@ -112,9 +75,9 @@ def main():
           f"{STEPS}-step losses within bf16 tolerance")
 
     # ---- segmented accum == classic scan-over-microbatches --------------
-    setup = build_setup("none")
-    _, m_seg, _ = run(setup, overlap.make_step(setup, "overlap", accum=2),
-                      batches)
+    setup = harness.build_setup("none", zero1=False)
+    _, m_seg, _ = harness.run(
+        setup, overlap.make_step(setup, "overlap", accum=2), batches)
     classic = dataclasses.replace(
         setup.arch, plan=dataclasses.replace(setup.arch.plan,
                                              overlap=False))
@@ -130,8 +93,6 @@ def main():
                                    err_msg="segmented vs classic accum")
     print("  accum=2: segmented vs classic scan step loss agrees (fp tol)")
 
-    print("OK dist_zero1_accum")
-
 
 if __name__ == "__main__":
-    main()
+    harness.run_main("dist_zero1_accum", main)

@@ -45,7 +45,7 @@ def test_front_door_topology():
     assert "docs/index.md" in readme
     index = set(_links("docs/index.md"))
     for doc in ("compression_api.md", "overlap.md", "experiments_api.md",
-                "comm_api.md", "adaptive.md"):
+                "comm_api.md", "adaptive.md", "measured_backend.md"):
         assert doc in index, f"docs/index.md missing link to {doc}"
         back = set(_links(os.path.join("docs", doc)))
         assert "index.md" in back, f"docs/{doc} does not link back to index"

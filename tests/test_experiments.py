@@ -65,12 +65,12 @@ def test_spec_hash_stability():
     b = ExperimentSpec(workload="resnet50", method="signsgd", workers=8)
     assert a.spec_hash() == b.spec_hash()
     assert a.spec_hash() != dataclasses.replace(a, workers=16).spec_hash()
-    # wire-format rev 5: ``scheme``/``error_feedback`` (the adaptive
-    # controller + ef: axis, repro.adaptive) joined the spec (rev 4
-    # added ``comm``, rev 3 ``zero1``/``accum``, rev 2 ``overlap``);
-    # old stored rows still load via from_json defaults, but hashes
-    # intentionally moved.
-    assert a.spec_hash() == "0d597e9a3e24e965", a.spec_hash()
+    # wire-format rev 6: ``procs`` (the multi-process pod axis,
+    # repro.experiments.multiproc) joined the spec (rev 5 added
+    # ``scheme``/``error_feedback``, rev 4 ``comm``, rev 3
+    # ``zero1``/``accum``, rev 2 ``overlap``); old stored rows still
+    # load via from_json defaults, but hashes intentionally moved.
+    assert a.spec_hash() == "81dcb7adce767830", a.spec_hash()
 
 
 def test_paper_matrix_size_and_uniqueness():
@@ -366,6 +366,23 @@ def test_adaptive_spec_axis_round_trips():
     del old["scheme"], old["error_feedback"]
     loaded = ExperimentSpec.from_json(old)
     assert loaded.scheme == "static" and loaded.error_feedback is False
+
+
+def test_procs_spec_axis_round_trips():
+    """Wire rev 6: ``procs`` (real multi-process pod cells) round-trips,
+    reshuffles the hash, shows in the label, and pre-rev-6 stored rows
+    load with the in-process default 0."""
+    spec = ExperimentSpec(workload="tinyllama-1.1b", method="none",
+                          kind="train", workers=4, procs=2)
+    back = ExperimentSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    assert back == spec and back.procs == 2
+    assert spec.spec_hash() != dataclasses.replace(
+        spec, procs=0).spec_hash()
+    assert "procs2" in spec.label()
+    assert "procs" not in dataclasses.replace(spec, procs=0).label()
+    old = spec.to_json()
+    del old["procs"]
+    assert ExperimentSpec.from_json(old).procs == 0
 
 
 def test_measured_backend_dryrun_missing_artifact(tmp_path):

@@ -1,0 +1,288 @@
+"""MultiProcessBackend, subprocess failure paths, and the pod
+calibration loop (ISSUE 9).
+
+Everything except the final real-pod smoke runs in milliseconds: the
+failure paths use canned ``python -c`` subprocesses through the
+``_pod_cmds`` seam, and the calibration tests use synthetic
+model-generated observations (the hypothesis property versions live in
+tests/test_properties.py; these are the pinned, always-on cases).
+"""
+import dataclasses
+import json
+import sys
+
+import pytest
+
+from repro.core.perfmodel import calibration as cal
+from repro.core.perfmodel.hardware import CPU_HOST
+from repro.experiments import report
+from repro.experiments.backend import (Result, parse_last_json_line,
+                                       run_subprocess_json)
+from repro.experiments.multiproc import MultiProcessBackend
+from repro.experiments.spec import ExperimentSpec
+
+PY = sys.executable
+
+
+# ---------------------------------------------------------------------------
+# run_subprocess_json: every failure mode is a string, never an exception
+# ---------------------------------------------------------------------------
+def test_subprocess_json_ok():
+    rec, err = run_subprocess_json(
+        [PY, "-c", "print('noise'); print('{\"a\": 1}')"])
+    assert err is None and rec == {"a": 1}
+
+
+def test_subprocess_json_nonzero_exit_keeps_stderr():
+    rec, err = run_subprocess_json(
+        [PY, "-c", "import sys; sys.stderr.write('boom boom'); "
+                   "sys.exit(3)"])
+    assert rec is None
+    assert "rc=3" in err and "boom boom" in err
+
+
+def test_subprocess_json_garbage_stdout():
+    rec, err = run_subprocess_json([PY, "-c", "print('not json at all')"])
+    assert rec is None
+    assert "bad stdout JSON" in err and "not json" in err
+
+
+def test_subprocess_json_truncated_json():
+    rec, err = run_subprocess_json([PY, "-c", "print('{\"a\": 1')"])
+    assert rec is None and "bad stdout JSON" in err
+
+
+def test_subprocess_json_timeout():
+    rec, err = run_subprocess_json(
+        [PY, "-c", "import time; time.sleep(60)"], timeout=1)
+    assert rec is None and "timeout after 1" in err
+
+
+def test_parse_last_json_line_contract():
+    assert parse_last_json_line("x\n{\"k\": 2}\n") == {"k": 2}
+    with pytest.raises(ValueError):
+        parse_last_json_line("")
+    with pytest.raises(ValueError):
+        parse_last_json_line("[1, 2]")   # a list is not a record
+    with pytest.raises(ValueError):
+        parse_last_json_line("{\"k\": ")
+
+
+# ---------------------------------------------------------------------------
+# MultiProcessBackend failure paths through the _pod_cmds seam
+# ---------------------------------------------------------------------------
+def pod_spec(**kw):
+    kw.setdefault("comm", "hierarchical:data")
+    kw.setdefault("method", "none")
+    kw.setdefault("workers", 4)
+    return ExperimentSpec(workload="tinyllama-1.1b", batch=8,
+                          hardware="cpu-host", kind="train", overlap=True,
+                          procs=2, **kw)
+
+
+class CannedPod(MultiProcessBackend):
+    """_pod_cmds replaced by canned ``python -c`` member commands."""
+
+    def __init__(self, cmds, **kw):
+        super().__init__(**kw)
+        self._canned = cmds
+
+    def _pod_cmds(self, spec, port):
+        return self._canned
+
+
+def test_pod_member_nonzero_exit_is_error_result():
+    b = CannedPod([[PY, "-c", "print('{}')"],
+                   [PY, "-c", "import sys; sys.stderr.write('gloo died'); "
+                              "sys.exit(7)"]])
+    r = b.run(pod_spec())
+    assert not r.ok and r.status == "error"
+    assert "pod_worker 1" in r.error and "rc=7" in r.error
+    assert "gloo died" in r.error          # stderr tail attached
+
+
+def test_pod_garbage_stdout_is_error_result():
+    b = CannedPod([[PY, "-c", "print('###')"], [PY, "-c", "pass"]])
+    r = b.run(pod_spec())
+    assert not r.ok and "bad stdout JSON" in r.error
+
+
+def test_pod_timeout_kills_all_and_is_error_result():
+    b = CannedPod([[PY, "-c", "import time; time.sleep(60)"],
+                   [PY, "-c", "import time; time.sleep(60)"]],
+                  pod_timeout=1)
+    r = b.run(pod_spec())
+    assert not r.ok and "timeout after 1" in r.error
+
+
+def test_pod_success_path_with_canned_record():
+    rec = dict(procs=2, workers=4, t_serial_us=1.0)
+    b = CannedPod([[PY, "-c", f"print('{json.dumps(rec)}')"],
+                   [PY, "-c", "pass"]])
+    r = b.run(pod_spec())
+    assert r.ok and r.metrics == rec and r.backend == "multiproc"
+
+
+def test_pod_workers_not_divisible_is_error_result():
+    r = MultiProcessBackend().run(pod_spec(workers=5))
+    assert not r.ok and "does not split" in r.error
+
+
+def test_pod_cmds_shape_and_method_normalization():
+    b = MultiProcessBackend(reps=3, warmup=1)
+    cmds = b._pod_cmds(pod_spec(method="syncsgd"), port=12345)
+    assert len(cmds) == 2
+    ids = {cmd[cmd.index("--proc-id") + 1] for cmd in cmds}
+    assert ids == {"0", "1"}
+    for cmd in cmds:
+        # the baseline id maps onto the bench's "none" compressor
+        assert cmd[cmd.index("--method") + 1] == "none"
+        assert cmd[cmd.index("--local-devices") + 1] == "2"
+        assert cmd[cmd.index("--comm") + 1] == "hierarchical:data"
+        assert cmd[cmd.index("--reps") + 1] == "3"
+        assert "--json" in cmd
+
+
+def test_non_pod_spec_falls_through_to_measured():
+    # procs=0 -> the inherited in-process MeasuredBackend path; a bogus
+    # kind exercises it without paying for a real measurement
+    r = MultiProcessBackend().run(
+        ExperimentSpec(workload="tinyllama-1.1b", method="none",
+                       kind="measured", workers=4, batch=8,
+                       hardware="cpu-host"))
+    assert r.backend == "multiproc"
+
+
+# ---------------------------------------------------------------------------
+# calibration: pinned (non-hypothesis) versions of the property tests
+# ---------------------------------------------------------------------------
+TRUE_HW = dataclasses.replace(CPU_HOST, alpha=80e-6, net_bw=3e9,
+                              dcn_bw=4e8)
+
+
+def synthetic_pod_result(comm, procs, local, hw=TRUE_HW,
+                         grad_bytes=1706496, t_compute=0.02):
+    """A Result whose t_serial is generated by the model itself on
+    ``hw`` — so the fit must round-trip with zero residual."""
+    spec = ExperimentSpec(workload="tinyllama-1.1b", method="none",
+                          workers=procs * local, batch=8,
+                          hardware="cpu-host", kind="train", overlap=True,
+                          procs=procs, comm=comm)
+    o = cal.PodObservation(
+        label=spec.label(), spec_hash=spec.spec_hash(), workload="x",
+        p=procs * local, p_intra=local, comm=cal._resolve_pod_comm(comm),
+        grad_bytes=float(grad_bytes), t_step=0.0, t_compute=t_compute)
+    t = cal.predict_pod_step(o, hw)
+    return Result(spec, "multiproc", metrics=dict(
+        procs=procs, workers=procs * local, local_devices=local,
+        comm=comm, grad_bytes=grad_bytes, t_serial_us=t * 1e6,
+        t_compute_us=t_compute * 1e6))
+
+
+def synthetic_sweep():
+    # 3 cells / 3 unknowns: hierarchical pins net_bw, the ring cells pin
+    # alpha + dcn_bw
+    return [synthetic_pod_result("hierarchical:data", 2, 2),
+            synthetic_pod_result("allreduce", 2, 2),
+            synthetic_pod_result("allreduce", 2, 1)]
+
+
+def test_calibration_zero_residual_round_trip():
+    fit = cal.calibrate_from_results(synthetic_sweep())
+    assert fit.n_obs == 3
+    assert fit.max_abs_rel_err < 1e-9
+    assert abs(fit.hardware.alpha - TRUE_HW.alpha) < 1e-10
+    assert abs(fit.hardware.net_bw - TRUE_HW.net_bw) / TRUE_HW.net_bw < 1e-6
+    assert abs(fit.hardware.dcn_bw - TRUE_HW.dcn_bw) / TRUE_HW.dcn_bw < 1e-6
+
+
+def test_calibration_order_invariant():
+    rs = synthetic_sweep()
+    a = cal.calibrate_from_results(rs)
+    b = cal.calibrate_from_results(list(reversed(rs)))
+    assert a.hardware == b.hardware and a.rows == b.rows
+
+
+def test_calibration_error_sign_convention():
+    # over-determined ring-only sweep (3 cells, 2 unknowns), then inflate
+    # one measurement: the compromise fit must under-predict that outlier
+    # cell, so its error comes out NEGATIVE (positive = over-predicts)
+    rs = [synthetic_pod_result("allreduce", 2, 1),
+          synthetic_pod_result("allreduce", 2, 2),
+          synthetic_pod_result("allreduce", 2, 4)]
+    slow = dataclasses.replace(rs[1], metrics=dict(
+        rs[1].metrics, t_serial_us=rs[1].metrics["t_serial_us"] * 10))
+    fit = cal.calibrate_from_results([rs[0], slow, rs[2]])
+    row = {r["spec_hash"]: r for r in fit.rows}[rs[1].spec.spec_hash()]
+    assert row["model_rel_err"] < 0
+    assert all(abs(r["model_rel_err"]) <= 10 for r in fit.rows)
+
+
+def test_observations_filter_non_pod_rows():
+    rs = synthetic_sweep()
+    junk = [
+        Result(rs[0].spec, "multiproc", status="error", error="x"),
+        Result(dataclasses.replace(rs[0].spec, procs=0), "measured",
+               metrics=dict(t_step_us=1.0)),
+    ]
+    assert len(cal.observations_from_results(rs + junk)) == 3
+
+
+def test_calibration_needs_observations():
+    with pytest.raises(ValueError):
+        cal.calibrate_from_results([])
+
+
+def test_attach_model_error_and_headline_column():
+    rs = synthetic_sweep()
+    other = Result(dataclasses.replace(rs[0].spec, procs=0, kind="train"),
+                   "measured", metrics=dict(t_sync_s=1.0))
+    fit = cal.calibrate_from_results(rs)
+    out = cal.attach_model_error(rs + [other], fit)
+    assert all("model_rel_err" in r.metrics for r in out[:3])
+    assert "model_rel_err" not in out[3].metrics   # non-pod passthrough
+
+    h = report.headline(out)
+    assert len(h["measured"]["cells"]) == 3
+    assert h["measured"]["max_abs_rel_err"] == 0.0
+    cell = h["measured"]["cells"][0]
+    assert {"setup", "comm", "t_measured_ms", "t_model_ms",
+            "model_rel_err"} <= set(cell)
+    v = [row for row in report.headline_verdicts(h)
+         if "calibrated model" in row[0]]
+    assert v and v[0][3] is True
+
+
+def test_unidentifiable_columns_fall_back_to_base_hw():
+    # ring-only sweep: nothing constrains net_bw -> stays at the base
+    rs = [synthetic_pod_result("allreduce", 2, 2),
+          synthetic_pod_result("allreduce", 2, 1)]
+    fit = cal.calibrate_from_results(rs, base_hw=CPU_HOST)
+    assert fit.hardware.net_bw == CPU_HOST.net_bw
+    assert fit.max_abs_rel_err < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# the real thing: a 2-process jax.distributed pod on a two-tier mesh
+# ---------------------------------------------------------------------------
+def test_pod_smoke_end_to_end():
+    """ISSUE 9 acceptance: a MultiProcessBackend cell launches a real
+    2-process pod from a clean checkout, measures a hierarchical CommPlan
+    on a genuine (pod × data) mesh, and the record feeds the calibration
+    fit + headline error column.  ~2 min on CPU (three jit programs)."""
+    b = MultiProcessBackend(reps=2, warmup=1, pod_timeout=840)
+    r = b.run(pod_spec(variant="pod-smoke"))
+    assert r.ok, r.error
+    m = r.metrics
+    assert m["procs"] == 2 and m["workers"] == 4
+    assert m["mesh_axes"] == ["pod", "data", "model"]
+    assert m["mesh_shape"] == [2, 2, 1]
+    assert m["effective_schedule"] == "overlap"
+    assert m["n_buckets"] >= 1 and m["grad_bytes"] > 0
+    assert m["t_serial_us"] > m["t_compute_us"] > 0
+
+    fit = cal.calibrate_from_results([r])
+    out = cal.attach_model_error([r], fit)
+    h = report.headline(out)
+    cells = h["measured"]["cells"]
+    assert len(cells) == 1 and cells[0]["comm"] == "hierarchical:data"

@@ -1,19 +1,29 @@
 """Hypothesis property tests on system invariants (deliverable c):
 performance-model monotonicity/limits, quantized-gather error bounds,
-roofline-parser conservation.
+roofline-parser conservation, pod-calibration fit invariants.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="dev-only dep; pip install -r "
-                                         "requirements-dev.txt")
+# Module-level gate ON PURPOSE (one skip row, not one per test).
+# Unblock condition: hypothesis importable — it ships in
+# requirements-dev.txt, so CI always runs these; locally they activate
+# the moment `hypothesis` is installed, no code change needed.
+pytest.importorskip("hypothesis", reason="needs hypothesis "
+                                         "(requirements-dev.txt; CI runs "
+                                         "these)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.perfmodel import calibration as cal
 from repro.core.perfmodel import costs
 from repro.core.perfmodel import model as pm
+from repro.core.perfmodel.hardware import CPU_HOST
+from repro.experiments.backend import Result
+from repro.experiments.spec import ExperimentSpec
 
 MB = 2 ** 20
 
@@ -130,3 +140,91 @@ def test_hloparse_flops_conserved_under_scan_nesting():
     comp = jax.jit(f).lower(w, x).compile()
     parsed = analyze_hlo(comp.as_text())
     assert parsed.flops == 3 * 4 * 2 * 8 * 32 * 32, parsed.flops
+
+
+# ------------------------------------------------------- pod calibration
+def _pod_result(comm, procs, local, hw, grad_bytes, t_compute, variant=""):
+    """A synthetic pod Result whose t_serial is generated by the α–β
+    model itself on ``hw`` (mirrors tests/test_multiproc.py)."""
+    spec = ExperimentSpec(workload="tinyllama-1.1b", method="none",
+                          workers=procs * local, batch=8,
+                          hardware="cpu-host", kind="train", overlap=True,
+                          procs=procs, comm=comm, variant=variant)
+    o = cal.PodObservation(
+        label=spec.label(), spec_hash=spec.spec_hash(), workload="w",
+        p=procs * local, p_intra=local, comm=cal._resolve_pod_comm(comm),
+        grad_bytes=float(grad_bytes), t_step=0.0, t_compute=t_compute)
+    t = cal.predict_pod_step(o, hw)
+    return Result(spec, "multiproc", metrics=dict(
+        procs=procs, workers=procs * local, local_devices=local,
+        comm=comm, grad_bytes=grad_bytes, t_serial_us=t * 1e6,
+        t_compute_us=t_compute * 1e6))
+
+
+def _hw(alpha, net_bw, dcn_bw):
+    return dataclasses.replace(CPU_HOST, alpha=alpha, net_bw=net_bw,
+                               dcn_bw=dcn_bw)
+
+
+_sweep_shapes = st.lists(
+    st.tuples(st.sampled_from(["allreduce", "reduce_scatter_allgather",
+                               "auto", "hierarchical:data"]),
+              st.integers(2, 4), st.integers(1, 4)),
+    min_size=0, max_size=4, unique=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(alpha=st.floats(1e-5, 1e-3), net=st.floats(1e8, 1e10),
+       dcn_frac=st.floats(0.05, 0.9), gb=st.integers(10**5, 10**7),
+       t_comp=st.floats(1e-3, 0.1), extra=_sweep_shapes)
+def test_calibration_round_trips_model_generated_data(alpha, net, dcn_frac,
+                                                      gb, t_comp, extra):
+    """Zero-residual round-trip: observations generated by the model on a
+    hidden Hardware are fitted back exactly (identifiable sweep: the
+    canonical hier 2×2 + ring 2×2 + ring 2×1 cells pin all 3 unknowns;
+    extra consistent cells never hurt)."""
+    hw = _hw(alpha, net, net * dcn_frac)
+    rs = [_pod_result("hierarchical:data", 2, 2, hw, gb, t_comp),
+          _pod_result("allreduce", 2, 2, hw, gb, t_comp),
+          _pod_result("allreduce", 2, 1, hw, gb, t_comp)]
+    rs += [_pod_result(c, p, l, hw, gb, t_comp, variant=f"x{i}")
+           for i, (c, p, l) in enumerate(extra)]
+    fit = cal.calibrate_from_results(rs)
+    assert fit.max_abs_rel_err < 1e-6
+    assert abs(fit.hardware.alpha - alpha) / alpha < 1e-3
+    assert abs(fit.hardware.net_bw - net) / net < 1e-3
+    assert abs(fit.hardware.dcn_bw - net * dcn_frac) / (net * dcn_frac) \
+        < 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(alpha=st.floats(1e-5, 1e-3), net=st.floats(1e8, 1e10),
+       dcn_frac=st.floats(0.05, 0.9), gb=st.integers(10**5, 10**7),
+       t_comp=st.floats(1e-3, 0.1), extra=_sweep_shapes,
+       noise=st.lists(st.floats(0.5, 2.0), min_size=7, max_size=7),
+       seed=st.randoms(use_true_random=False))
+def test_calibration_order_invariant_and_error_column_sane(
+        alpha, net, dcn_frac, gb, t_comp, extra, noise, seed):
+    """The fit is EXACTLY invariant to result ordering, and the error
+    column is bounded below by -1 (t_model > 0) and sign-consistent with
+    t_model vs t_measured — on noisy, not-necessarily-consistent data."""
+    hw = _hw(alpha, net, net * dcn_frac)
+    rs = [_pod_result("hierarchical:data", 2, 2, hw, gb, t_comp),
+          _pod_result("allreduce", 2, 2, hw, gb, t_comp),
+          _pod_result("allreduce", 2, 1, hw, gb, t_comp)]
+    rs += [_pod_result(c, p, l, hw, gb, t_comp, variant=f"x{i}")
+           for i, (c, p, l) in enumerate(extra)]
+    rs = [dataclasses.replace(r, metrics=dict(
+              r.metrics, t_serial_us=r.metrics["t_serial_us"] * f))
+          for r, f in zip(rs, noise)]
+    shuffled = list(rs)
+    seed.shuffle(shuffled)
+    a = cal.calibrate_from_results(rs)
+    b = cal.calibrate_from_results(shuffled)
+    assert a.hardware == b.hardware and a.rows == b.rows
+    for row in a.rows:
+        err = row["model_rel_err"]
+        assert err > -1.0
+        assert err == (row["t_model_s"] - row["t_measured_s"]) \
+            / row["t_measured_s"]
+        assert (err >= 0) == (row["t_model_s"] >= row["t_measured_s"])
